@@ -1,0 +1,46 @@
+"""Shared benchmark harness: timing + CSV emission.
+
+Every fig* module exposes run(quick) -> list of (name, us_per_call, derived)
+rows; benchmarks.run prints them as ``name,us_per_call,derived`` CSV.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Any, Callable, List, Tuple
+
+import jax
+import numpy as np
+
+Row = Tuple[str, float, str]
+
+
+def time_fn(fn: Callable, *args, warmup: int = 2, iters: int = 5) -> float:
+    """Median wall-time of a jitted callable, in microseconds."""
+    for _ in range(warmup):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts) * 1e6)
+
+
+def make_sparse_problem(key, r: int, k: int, c: int, n: int, m: int,
+                        dtype=None):
+    """A [r, k] N:M sparse (compressed), B [k, c] dense (paper orientation)."""
+    import jax.numpy as jnp
+    from repro.core.sparsity import compress
+    dtype = dtype or jnp.float32
+    k1, k2 = jax.random.split(key)
+    a = jax.random.normal(k1, (r, k), jnp.float32).astype(dtype)
+    b = jax.random.normal(k2, (k, c), jnp.float32).astype(dtype)
+    return compress(a, n, m), b
+
+
+def emit(rows: List[Row]) -> None:
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")

@@ -1,0 +1,96 @@
+"""Fig 6 / Fig 7 / Fig 10 analogue: kernel-strategy & blocking sweep.
+
+The paper sweeps inner/outer loop unrolling of the SpMM kernel (rolled -> 3x
+with interleaved (16, 8) unrolling).  The TPU/XLA analogue sweeps execution
+strategies of the same structured-sparse GEMM, from the rolled scalar-ish
+loop to the fully vectorized slot-unrolled form, on DenseNet121 layers 5/23/87
+(1:4 sparsity, fp32 — the paper's setup):
+
+  rolled        lax.scan over non-zero slots, one (gather row of B, axpy) per
+                step — Algorithm 3-S rolled
+  unroll_n      slot-loop over the N in-block slots, each step vectorized over
+                all blocks — the paper's interleaved inner-loop unroll
+  vectorized    one-hot decompress + dense dot — full unroll to the MXU path
+
+Also reports the Pallas-kernel VMEM footprint per candidate block shape (the
+TPU equivalent of "registers consumed by unrolling" — Fig 10's constraint).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from functools import partial
+
+from benchmarks.common import Row, make_sparse_problem, time_fn
+from repro.core.sparse_matmul import _decompress_xla
+from repro.models.cnn import CNN_LAYER_GEMMS
+
+N, M = 1, 4
+
+
+@partial(jax.jit, static_argnames=("n", "m"))
+def _rolled(values, indices, b, n: int, m: int):
+    r, nnz = values.shape
+    k, c = b.shape
+    blk = (jnp.arange(nnz, dtype=jnp.int32) // n) * m
+
+    def step(acc, j):
+        col = blk[j] + indices[:, j].astype(jnp.int32)       # [r]
+        rows = b[col]                                        # gather [r, c]
+        return acc + values[:, j][:, None] * rows, None
+
+    acc0 = jnp.zeros((r, c), values.dtype)
+    acc, _ = jax.lax.scan(step, acc0, jnp.arange(nnz))
+    return acc
+
+
+@partial(jax.jit, static_argnames=("n", "m"))
+def _unroll_n(values, indices, b, n: int, m: int):
+    """Vectorized over blocks; static loop over the N slots (the interleaved
+    unroll): per slot, gather B rows for every block at once."""
+    r, nnz = values.shape
+    k, c = b.shape
+    nb = k // m
+    vals3 = values.reshape(r, nb, n)
+    idx3 = indices.reshape(r, nb, n).astype(jnp.int32)
+    base = jnp.arange(nb, dtype=jnp.int32) * m
+    acc = jnp.zeros((r, c), jnp.float32)
+    for s in range(n):
+        col = base[None, :] + idx3[:, :, s]                  # [r, nb]
+        rows = b[col]                                        # [r, nb, c]
+        acc = acc + jnp.einsum("rb,rbc->rc", vals3[:, :, s].astype(jnp.float32),
+                               rows.astype(jnp.float32))
+    return acc.astype(b.dtype)
+
+
+@partial(jax.jit, static_argnames=("n", "m"))
+def _vectorized(values, indices, b, n: int, m: int):
+    a = _decompress_xla(values, indices, n, m, b.shape[0])
+    return jnp.dot(a, b, preferred_element_type=jnp.float32).astype(b.dtype)
+
+
+def run(quick: bool = True):
+    rows = []
+    layers = CNN_LAYER_GEMMS["densenet121"][:3]
+    key = jax.random.PRNGKey(0)
+    for (lname, r, k, spatial) in layers:
+        kk = -(-k // M) * M
+        c = spatial if not quick else min(spatial, 1024)
+        sp, b = make_sparse_problem(key, r, kk, c, N, M)
+        t_rolled = time_fn(_rolled, sp.values, sp.indices, b, N, M)
+        t_unroll = time_fn(_unroll_n, sp.values, sp.indices, b, N, M)
+        t_vec = time_fn(_vectorized, sp.values, sp.indices, b, N, M)
+        rows.append((f"fig06/{lname}/rolled", t_rolled, "speedup=1.00"))
+        rows.append((f"fig06/{lname}/unroll_n", t_unroll,
+                     f"speedup={t_rolled / t_unroll:.2f}"))
+        rows.append((f"fig06/{lname}/vectorized", t_vec,
+                     f"speedup={t_rolled / t_vec:.2f}"))
+    # Pallas block shapes: VMEM footprint per candidate (Fig 10 constraint)
+    for (bm, bn, bk) in [(128, 128, 512), (256, 128, 512), (128, 256, 1024),
+                         (512, 128, 512)]:
+        bnnz = bk // M * N
+        vmem = (bm * bk + bk * bn + bm * bn) * 4 + bm * bnnz * 5
+        rows.append((f"fig06/block_{bm}x{bn}x{bk}", 0.0,
+                     f"vmem_bytes={vmem};fits16MB={vmem < 16e6}"))
+    return rows

@@ -1,0 +1,79 @@
+"""Fig 8 analogue: data-placement variants Alg 1-S vs 2-S vs 3-S.
+
+The RISC-V variants differ in WHERE the non-zero values of A live and how
+each value reaches the multiplier.  The XLA analogues reproduce the access
+patterns:
+
+  alg1s   values streamed element-at-a-time via a slide of the value vector
+          (vector->scalar move per step): scan with jnp.roll + [:, 0]
+  alg2s   values loaded scalar-by-scalar from memory per step: scan with
+          dynamic_slice into the values array per non-zero
+  alg3s   values kept vector-resident, selected by slot (vrgather.vx):
+          vectorized slot-loop (the fast variant the paper selects)
+
+All use the same compact col_idx + block_id*M reconstruction.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import make_sparse_problem, time_fn
+from benchmarks.fig06_unroll import _unroll_n
+from repro.models.cnn import CNN_LAYER_GEMMS
+
+N, M = 1, 4
+
+
+@partial(jax.jit, static_argnames=("n", "m"))
+def _alg1s(values, indices, b, n: int, m: int):
+    r, nnz = values.shape
+    k, c = b.shape
+    blk = (jnp.arange(nnz, dtype=jnp.int32) // n) * m
+
+    def step(carry, j):
+        acc, vals_sliding = carry
+        v = vals_sliding[:, 0]                                # element 0 (move)
+        col = blk[j] + indices[:, j].astype(jnp.int32)
+        acc = acc + v[:, None] * b[col]
+        return (acc, jnp.roll(vals_sliding, -1, axis=1)), None  # vector slide
+
+    acc0 = jnp.zeros((r, c), values.dtype)
+    (acc, _), _ = jax.lax.scan(step, (acc0, values), jnp.arange(nnz))
+    return acc
+
+
+@partial(jax.jit, static_argnames=("n", "m"))
+def _alg2s(values, indices, b, n: int, m: int):
+    r, nnz = values.shape
+    k, c = b.shape
+    blk = (jnp.arange(nnz, dtype=jnp.int32) // n) * m
+
+    def step(acc, j):
+        v = jax.lax.dynamic_slice(values, (0, j), (r, 1))[:, 0]  # scalar load
+        col = blk[j] + indices[:, j].astype(jnp.int32)
+        return acc + v[:, None] * b[col], None
+
+    acc0 = jnp.zeros((r, c), values.dtype)
+    acc, _ = jax.lax.scan(step, acc0, jnp.arange(nnz))
+    return acc
+
+
+def run(quick: bool = True):
+    rows = []
+    key = jax.random.PRNGKey(1)
+    for (lname, r, k, spatial) in CNN_LAYER_GEMMS["densenet121"][:3]:
+        kk = -(-k // M) * M
+        c = spatial if not quick else min(spatial, 1024)
+        sp, b = make_sparse_problem(key, r, kk, c, N, M)
+        t1 = time_fn(_alg1s, sp.values, sp.indices, b, N, M)
+        t2 = time_fn(_alg2s, sp.values, sp.indices, b, N, M)
+        t3 = time_fn(_unroll_n, sp.values, sp.indices, b, N, M)
+        best = min(t1, t2, t3)
+        rows.append((f"fig08/{lname}/alg1s", t1, f"rel={t1 / best:.2f}"))
+        rows.append((f"fig08/{lname}/alg2s", t2, f"rel={t2 / best:.2f}"))
+        rows.append((f"fig08/{lname}/alg3s", t3, f"rel={t3 / best:.2f}"))
+    return rows

@@ -1,0 +1,82 @@
+"""Fig 9 analogue: Alg-3S vs full-column (FC) vs SPA, + storage overhead.
+
+  alg3s      compact block-local col_idx + block_id*M reconstruction (ours)
+  alg3s_fc   full-width int32 column ids (CSR-like; no reconstruction
+             arithmetic but bigger index stream) — paper's Alg-3S-FC
+  spa        unstructured gather SpMM (vector-indexed loads; the paper's SPA
+             baseline whose indexed loads thrash the cache)
+
+Storage columns reproduce §IV-B: FC's index stream costs 14.7–26.5 % extra
+on the paper's layers; ours packs ceil(log2 M)-bit indices.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import make_sparse_problem, time_fn
+from benchmarks.fig06_unroll import _unroll_n
+from repro.core.sparsity import storage_bytes
+from repro.models.cnn import CNN_LAYER_GEMMS
+
+N, M = 1, 4
+
+
+@partial(jax.jit, static_argnames=("n", "m"))
+def _alg3s_fc(values, full_idx, b, n: int, m: int):
+    """Full column ids: gather directly, no reconstruction."""
+    r, nnz = values.shape
+    rows = b[full_idx]                                       # [r, nnz, c]
+    return jnp.einsum("re,rec->rc", values.astype(jnp.float32),
+                      rows.astype(jnp.float32)).astype(b.dtype)
+
+
+@partial(jax.jit, static_argnames=())
+def _spa(values, coords, b):
+    """Unstructured COO-ish: per-nonzero row/col gather + segment-sum."""
+    rows_ix, cols_ix = coords                                # [nnz_total]
+    gathered = b[cols_ix] * values[:, None]                  # [nnz_total, c]
+    num_rows = int(rows_ix.shape[0])  # placeholder; segment count via max+1
+    return jax.ops.segment_sum(gathered, rows_ix,
+                               num_segments=values.shape[0] and None)  # unused
+
+
+def _spa_fn(r):
+    @jax.jit
+    def f(values, rows_ix, cols_ix, b):
+        gathered = b[cols_ix] * values[:, None]
+        return jax.ops.segment_sum(gathered, rows_ix, num_segments=r)
+    return f
+
+
+def run(quick: bool = True):
+    rows = []
+    key = jax.random.PRNGKey(2)
+    for (lname, r, k, spatial) in CNN_LAYER_GEMMS["densenet121"][:3]:
+        kk = -(-k // M) * M
+        c = spatial if not quick else min(spatial, 1024)
+        sp, b = make_sparse_problem(key, r, kk, c, N, M)
+        nnz = sp.nnz_per_row
+        blk = (jnp.arange(nnz, dtype=jnp.int32) // N) * M
+        full_idx = blk[None, :] + sp.indices.astype(jnp.int32)
+
+        t3 = time_fn(_unroll_n, sp.values, sp.indices, b, N, M)
+        tfc = time_fn(_alg3s_fc, sp.values, full_idx, b, N, M)
+        # SPA: same nonzeros, unstructured COO layout
+        vals_flat = sp.values.reshape(-1)
+        rows_ix = jnp.repeat(jnp.arange(r, dtype=jnp.int32), nnz)
+        cols_ix = full_idx.reshape(-1)
+        tspa = time_fn(_spa_fn(r), vals_flat, rows_ix, cols_ix, b)
+
+        sb = storage_bytes(sp, packed=True)
+        sb_fc = storage_bytes(sp, full_column=True)
+        rows.append((f"fig09/{lname}/alg3s", t3,
+                     f"rel_spa={tspa / t3:.2f};storage={sb}"))
+        rows.append((f"fig09/{lname}/alg3s_fc", tfc,
+                     f"rel_spa={tspa / tfc:.2f};storage={sb_fc};"
+                     f"overhead={(sb_fc - sb) / sb * 100:.1f}%"))
+        rows.append((f"fig09/{lname}/spa", tspa, "rel_spa=1.00"))
+    return rows

@@ -1,0 +1,57 @@
+"""Fig 11 analogue: end-to-end CNN runtimes, sparse vs dense, 1:4 and 2:4.
+
+Runs every im2col GEMM of the three evaluated CNNs (ResNet50, DenseNet121,
+InceptionV3) through:
+  dense        plain dense dot (no pruning)
+  spmm         structured-sparse decompress+dot — on a machine WITHOUT an
+               indexed-register-read instruction this is the practical sparse
+               kernel (it is also the TPU nm_spmm dataflow)
+  gather_sem   the literal vindexmac gather-MAC semantics executed WITHOUT
+               hardware support (XLA CPU scalarizes the indexed loads)
+
+Finding (EXPERIMENTS.md §Validation): gather_sem is 1-2 orders of magnitude
+slower than spmm on CPU — a direct quantification of the gap the paper's
+vindexmac instruction closes in hardware.  The paper's +25/+33 % win is the
+hardware-assisted version of exactly this access pattern; on TPU the
+equivalent assist is the VMEM-resident decompress (kernels/nm_spmm.py),
+whose HBM win fig12 and the roofline quantify.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import make_sparse_problem, time_fn
+from benchmarks.fig06_unroll import _unroll_n, _vectorized
+from repro.models.cnn import CNN_LAYER_GEMMS
+
+
+@partial(jax.jit)
+def _dense(a, b):
+    return jnp.dot(a, b, preferred_element_type=jnp.float32).astype(b.dtype)
+
+
+def run(quick: bool = True):
+    rows = []
+    key = jax.random.PRNGKey(3)
+    for (n, m) in [(1, 4), (2, 4)]:
+        for net, layers in CNN_LAYER_GEMMS.items():
+            tot_dense = tot_spmm = tot_prop = 0.0
+            for (lname, r, k, spatial) in (layers[:3] if quick else layers):
+                kk = -(-k // m) * m
+                c = spatial if not quick else min(spatial, 784)
+                sp, b = make_sparse_problem(key, r, kk, c, n, m)
+                a_dense = jnp.zeros((r, kk), b.dtype)  # dense baseline operand
+                tot_dense += time_fn(_dense, a_dense, b)
+                tot_spmm += time_fn(_vectorized, sp.values, sp.indices, b, n, m)
+                tot_prop += time_fn(_unroll_n, sp.values, sp.indices, b, n, m)
+            rows.append((f"fig11/{net}/{n}_{m}/gather_sem", tot_prop,
+                         f"vs_spmm={tot_spmm / tot_prop:.2f};"
+                         f"hw_gap={tot_prop / tot_spmm:.0f}x"))
+            rows.append((f"fig11/{net}/{n}_{m}/spmm", tot_spmm,
+                         f"vs_dense={tot_dense / tot_spmm:.2f}"))
+            rows.append((f"fig11/{net}/{n}_{m}/dense", tot_dense, "base=1.0"))
+    return rows

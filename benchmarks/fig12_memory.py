@@ -1,0 +1,74 @@
+"""Fig 12 analogue: total memory accesses, proposed vs SpMM-dense baseline.
+
+The paper reports 42 % (1:4) / 63 % (2:4) fewer total memory accesses from
+vindexmac's register-file locality.  The TPU equivalent is HBM traffic, which
+we take from the kernel BlockSpec traffic model (kernels/ops.py) — the same
+model the roofline uses — plus the compiled-HLO byte model for the XLA path.
+
+Reported 'derived' = sparse/dense byte ratio per CNN (weight stream + B
+stream + output), decode-regime (x resident like the VRF tile of B).
+"""
+
+from __future__ import annotations
+
+import jax
+
+from benchmarks.common import Row
+from repro.kernels.ops import traffic_mm, traffic_spmv
+from repro.models.cnn import CNN_LAYER_GEMMS
+
+
+def _access_counts(r, k, c, n, m, vl=16, l_tile=16, dtype=4):
+    """Paper-faithful access-count model (gem5-style, cache-oblivious):
+
+    SpMM(16,8) (Alg 3-S): every non-zero triggers a vector load of the
+    matching B row chunk; A values/indices stream once per vertical segment.
+    Proposed (Alg 6 / vindexmac): B tiles are loaded into the register file
+    once per vertical segment and all further reads are register-local.
+    """
+    nnz = r * (k // m) * n
+    segs = -(-c // vl)
+    a_bytes = nnz * (dtype + 0.25) * segs          # values + 2-bit idx stream
+    out_bytes = r * c * dtype
+    spmm_b = nnz * vl * dtype * segs               # B row chunk per non-zero
+    prop_b = k * vl * dtype * segs                 # B tile once per segment
+    return (a_bytes + out_bytes + spmm_b, a_bytes + out_bytes + prop_b)
+
+
+def run(quick: bool = True):
+    rows = []
+    for (n, m) in [(1, 4), (2, 4)]:
+        for net, layers in CNN_LAYER_GEMMS.items():
+            tot_sp = tot_d = 0.0
+            tot_sp_mm = tot_d_mm = 0.0
+            tot_alg3s = tot_prop = 0.0
+            for (lname, r, k, spatial) in layers:
+                kk = -(-k // m) * m
+                # decode/matvec regime (vindexmac): x resident, W streamed
+                s = traffic_spmv(spatial, r, kk, n, m, dtype_bytes=4,
+                                 sparse=True)
+                d = traffic_spmv(spatial, r, kk, n, m, dtype_bytes=4,
+                                 sparse=False)
+                tot_sp += s["hbm_bytes"]
+                tot_d += d["hbm_bytes"]
+                # matmul regime (nm_spmm): tiled A and B streams
+                smm = traffic_mm(spatial, r, kk, n, m, dtype_bytes=4,
+                                 sparse=True)
+                dmm = traffic_mm(spatial, r, kk, n, m, dtype_bytes=4,
+                                 sparse=False)
+                tot_sp_mm += smm["hbm_bytes"]
+                tot_d_mm += dmm["hbm_bytes"]
+                a3, pr = _access_counts(r, kk, spatial, n, m)
+                tot_alg3s += a3
+                tot_prop += pr
+            rows.append((f"fig12/{net}/{n}_{m}/tpu_hbm_spmv", 0.0,
+                         f"bytes_ratio={tot_sp / tot_d:.3f};"
+                         f"reduction={(1 - tot_sp / tot_d) * 100:.1f}%"))
+            rows.append((f"fig12/{net}/{n}_{m}/tpu_hbm_spmm", 0.0,
+                         f"bytes_ratio={tot_sp_mm / tot_d_mm:.3f};"
+                         f"reduction={(1 - tot_sp_mm / tot_d_mm) * 100:.1f}%"))
+            rows.append((f"fig12/{net}/{n}_{m}/paper_access_model", 0.0,
+                         f"prop_vs_spmm={tot_prop / tot_alg3s:.3f};"
+                         f"reduction={(1 - tot_prop / tot_alg3s) * 100:.1f}%"
+                         f";paper_ref={'42%' if (n, m) == (1, 4) else '63%'}"))
+    return rows

@@ -1,0 +1,44 @@
+"""Fig 13 analogue: hardware vector length scaling (VL 8 -> 16 -> 32).
+
+The RISC-V VL maps to the TPU lane/block width (Pallas bn) and, on the CPU
+measurement host, to the width of the B panel processed per fused op.  We
+time the proposed kernel at B widths {128, 256, 512} (x same row count) and
+report normalized throughput (paper: near-perfect scaling while the working
+set fits cache), plus the Pallas-kernel traffic model at bn = {128, 256, 512}
+showing the structural VL scaling on the TPU target.
+"""
+
+from __future__ import annotations
+
+import jax
+
+from benchmarks.common import make_sparse_problem, time_fn
+from benchmarks.fig06_unroll import _vectorized
+from repro.kernels.ops import traffic_mm
+from repro.models.cnn import CNN_LAYER_GEMMS
+
+N, M = 1, 4
+
+
+def run(quick: bool = True):
+    rows = []
+    key = jax.random.PRNGKey(4)
+    lname, r, k, spatial = CNN_LAYER_GEMMS["densenet121"][0]
+    kk = -(-k // M) * M
+    base_t = None
+    for c in (128, 256, 512):
+        sp, b = make_sparse_problem(key, r, kk, c, N, M)
+        t = time_fn(_vectorized, sp.values, sp.indices, b, N, M)
+        per_col = t / c
+        if base_t is None:
+            base_t = per_col
+        rows.append((f"fig13/{lname}/width_{c}", t,
+                     f"us_per_col={per_col:.3f};"
+                     f"scaling_eff={base_t / per_col:.2f}"))
+    for bn in (128, 256, 512):
+        tm = traffic_mm(2048, r, kk, N, M, dtype_bytes=4,
+                        block=(128, bn, 512))
+        rows.append((f"fig13/tpu_bn_{bn}", 0.0,
+                     f"hbm_bytes={tm['hbm_bytes']:.3e};"
+                     f"mxu_flops={tm['mxu_flops']:.3e}"))
+    return rows

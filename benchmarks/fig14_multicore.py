@@ -1,0 +1,92 @@
+"""Fig 14/15 analogue: multicore scaling via the paper's vertical-segment
+dataflow (§III-C) — each core owns a vertical segment of B/C columns; A is
+read by all cores.
+
+We run the sharded SpMM under shard_map on {1, 2, 4, 8} host devices
+(subprocess: the device count must be fixed before jax init).  The container
+has ONE physical core, so wall-clock cannot show real multicore speedup —
+reported columns are (a) measured time (flat-to-rising = scheduling overhead
+on 1 core, the honest caveat), (b) per-device collective/compute bytes from
+the compiled artifact, which is the structural scaling the paper's Fig 15
+saturation comes from (A broadcast traffic grows with cores while per-core
+compute shrinks).
+"""
+
+from __future__ import annotations
+
+import json
+import subprocess
+import sys
+
+_CHILD = r"""
+import os, sys, json
+os.environ["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={sys.argv[1]}"
+import time
+import jax, jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+from repro.core.sparsity import compress
+from repro.launch.hlo_cost import analyze_hlo
+
+n_dev = int(sys.argv[1])
+N, M = 1, 4
+R, K, C = 128, 1152, 1024 * n_dev   # C grows with cores: fixed work per core
+key = jax.random.PRNGKey(0)
+a = jax.random.normal(key, (R, K))
+sp = compress(a, N, M)
+b = jax.random.normal(jax.random.PRNGKey(1), (K, C))
+
+mesh = jax.make_mesh((n_dev,), ("c",))
+
+def local_spmm(vals, idx, b_seg):
+    nb = K // M
+    vals3 = vals.reshape(R, nb, N)
+    idx3 = idx.reshape(R, nb, N).astype(jnp.int32)
+    base = jnp.arange(nb, dtype=jnp.int32) * M
+    acc = jnp.zeros((R, b_seg.shape[1]), jnp.float32)
+    for s in range(N):
+        col = base[None, :] + idx3[:, :, s]
+        acc = acc + jnp.einsum("rb,rbc->rc", vals3[:, :, s], b_seg[col])
+    return acc
+
+f = jax.jit(shard_map(local_spmm, mesh=mesh,
+                      in_specs=(P(), P(), P(None, "c")),
+                      out_specs=P(None, "c")))
+lowered = f.lower(sp.values, sp.indices, b)
+compiled = lowered.compile()
+hc = analyze_hlo(compiled.as_text())
+out = f(sp.values, sp.indices, b)
+jax.block_until_ready(out)
+import numpy as np
+ts = []
+for _ in range(5):
+    t0 = time.perf_counter(); jax.block_until_ready(f(sp.values, sp.indices, b))
+    ts.append(time.perf_counter() - t0)
+print(json.dumps({"devices": n_dev, "us": float(np.median(ts) * 1e6),
+                  "flops_per_dev": hc["flops"], "bytes_per_dev": hc["bytes"],
+                  "coll_bytes_per_dev": hc["collective_bytes"]}))
+"""
+
+
+def run(quick: bool = True):
+    rows = []
+    counts = [1, 2, 4, 8] if not quick else [1, 2, 4]
+    base_us = None
+    for n in counts:
+        res = subprocess.run(
+            [sys.executable, "-c", _CHILD, str(n)],
+            capture_output=True, text=True,
+            env={**__import__("os").environ, "PYTHONPATH": "src"})
+        line = res.stdout.strip().splitlines()[-1] if res.stdout.strip() else ""
+        if not line:
+            rows.append((f"fig14/cores_{n}", 0.0,
+                         f"error={res.stderr.strip()[-120:]}"))
+            continue
+        d = json.loads(line)
+        if base_us is None:
+            base_us = d["us"]
+        rows.append((f"fig14/cores_{n}", d["us"],
+                     f"work_scaled_speedup={base_us * n / d['us']:.2f};"
+                     f"flops_dev={d['flops_per_dev']:.2e};"
+                     f"coll_dev={d['coll_bytes_per_dev']:.2e}"))
+    return rows

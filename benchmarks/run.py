@@ -1,0 +1,41 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV.  --full disables the quick-mode size
+reductions; --only fig11 runs a single figure.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+from benchmarks.common import emit
+
+FIGS = ["fig06_unroll", "fig08_algorithms", "fig09_baselines",
+        "fig11_cnn_speedup", "fig12_memory", "fig13_veclen",
+        "fig14_multicore", "fig15_decode_matvec"]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default="")
+    args, _ = ap.parse_known_args()
+    mods = [f for f in FIGS if args.only in f] if args.only else FIGS
+    print("name,us_per_call,derived")
+    failures = 0
+    for name in mods:
+        try:
+            mod = __import__(f"benchmarks.{name}", fromlist=["run"])
+            emit(mod.run(quick=not args.full))
+        except Exception as e:
+            failures += 1
+            print(f"{name},0.0,ERROR:{type(e).__name__}:{e}")
+            traceback.print_exc(file=sys.stderr)
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,56 @@
+"""Pipeline parallelism demo (GPipe schedule over a `pp` mesh axis).
+
+Spawns itself with 4 host devices, splits a 8-layer MLP into 4 stages, and
+streams 8 microbatches through — verifying against the sequential model.
+
+Run:  PYTHONPATH=src python examples/pipeline_parallel.py
+"""
+
+import os
+import subprocess
+import sys
+
+_CHILD_FLAG = "_PP_CHILD"
+
+
+def child():
+    import jax
+    import jax.numpy as jnp
+    from repro.dist.pipeline import pipeline_apply
+
+    mesh = jax.make_mesh((4,), ("pp",))
+    S, M, MB, D = 4, 8, 4, 64
+    ks = jax.random.split(jax.random.PRNGKey(0), S)
+    params = jnp.stack([jax.random.normal(k, (D, D)) * 0.3 for k in ks])
+
+    def stage(w, x):
+        return jnp.tanh(x @ w)
+
+    x = jax.random.normal(jax.random.PRNGKey(1), (M, MB, D))
+    y = pipeline_apply(stage, params, x, mesh, axis="pp")
+
+    ref = x
+    for s in range(S):
+        ref = jax.vmap(lambda xb: stage(params[s], xb))(ref)
+    err = float(jnp.abs(y - ref).max())
+    print(f"4-stage GPipe over {M} microbatches: max|err| vs sequential "
+          f"= {err:.2e}")
+    assert err < 1e-5
+    print("pipeline ok — bubble fraction (S-1)/(M+S-1) = "
+          f"{(S-1)/(M+S-1):.0%}")
+
+
+def main():
+    if os.environ.get(_CHILD_FLAG):
+        child()
+        return
+    env = dict(os.environ,
+               XLA_FLAGS="--xla_force_host_platform_device_count=4",
+               **{_CHILD_FLAG: "1"})
+    env.setdefault("PYTHONPATH", "src")
+    res = subprocess.run([sys.executable, __file__], env=env)
+    raise SystemExit(res.returncode)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,38 @@
+"""Batched serving with compressed N:M weights: prefill a batch of prompts,
+then greedy-decode — the vindexmac regime (decode streams the compressed
+weight format; see kernels/nm_spmv.py for the TPU kernel).
+
+Run:  PYTHONPATH=src python examples/serve_decode.py --arch llama3.2-1b
+"""
+
+import argparse
+import time
+
+import numpy as np
+
+from repro.launch.serve import serve
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3.2-1b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--impl", default="xla",
+                    help="xla | xla_gather | pallas_interpret")
+    args = ap.parse_args()
+
+    toks, t_prefill, t_decode = serve(args.arch, smoke=True,
+                                      batch=args.batch,
+                                      prompt_len=args.prompt_len,
+                                      gen=args.gen, impl=args.impl)
+    print(f"arch={args.arch} impl={args.impl}")
+    print(f"prefill: {t_prefill*1e3:8.1f} ms for {args.batch}x{args.prompt_len}")
+    print(f"decode : {t_decode*1e3:8.2f} ms/token (batch {args.batch})")
+    for i, row in enumerate(np.asarray(toks)):
+        print(f"  seq{i}: {row[:12].tolist()}")
+
+
+if __name__ == "__main__":
+    main()

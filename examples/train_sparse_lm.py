@@ -1,0 +1,59 @@
+"""End-to-end driver: train an N:M-sparse LM with the full production stack
+(data pipeline -> SR-STE sparse model -> AdamW -> checkpoint/restart).
+
+Presets:
+  demo  (default) ~4M params,  fits a CPU smoke run in ~a minute
+  100m            ~100M-param llama-style model, a few hundred steps — the
+                  assignment's reference workload (hours on 1 CPU core; sized
+                  for a single accelerator otherwise)
+
+Run:  PYTHONPATH=src python examples/train_sparse_lm.py --preset demo --steps 60
+"""
+
+import argparse
+
+from repro.configs import get_config
+from repro.launch.train import train_loop
+
+
+def preset_cfg(name: str):
+    base = get_config("llama3.2-1b", smoke=True)
+    if name == "demo":
+        return base.replace(n_layers=4, d_model=256, n_heads=8, n_kv=4,
+                            d_ff=1024, vocab=2048)
+    if name == "100m":
+        # ~100M params: 12L x d768 (llama-style), 32k vocab
+        return base.replace(n_layers=12, d_model=768, n_heads=12, n_kv=4,
+                            d_ff=2048, vocab=32768, head_dim=64)
+    raise SystemExit(f"unknown preset {name}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", default="demo", choices=["demo", "100m"])
+    ap.add_argument("--steps", type=int, default=60)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    args = ap.parse_args()
+
+    import repro.launch.train as T
+
+    cfg = preset_cfg(args.preset)
+
+    # train_loop resolves configs by name; patch in the preset via a shim
+    orig = T.get_config
+    T.get_config = lambda name, smoke=False: cfg
+    try:
+        losses = T.train_loop("preset", smoke=False, steps=args.steps,
+                              batch=args.batch, seq=args.seq,
+                              ckpt_dir=args.ckpt_dir, ckpt_every=25,
+                              log_every=10, base_lr=1e-3)
+    finally:
+        T.get_config = orig
+    print(f"\npreset={args.preset}: loss {losses[0]:.3f} -> {losses[-1]:.3f} "
+          f"over {len(losses)} steps (resume-capable via {args.ckpt_dir})")
+
+
+if __name__ == "__main__":
+    main()

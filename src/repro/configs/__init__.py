@@ -1,0 +1,1 @@
+from repro.configs.registry import ALL_ARCHS, get_config

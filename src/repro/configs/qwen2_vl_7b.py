@@ -1,0 +1,24 @@
+"""qwen2-vl-7b [vlm] — 28L d3584 28H (GQA kv=4) dff18944 v152064; qkv bias.
+[arXiv:2409.12191; hf]
+
+Frontend STUB per assignment: the vision tower/dynamic-resolution pipeline is
+not built; ``input_specs`` supplies precomputed patch+text embeddings
+[B, S, d] for train/prefill (input_mode='embeds').  M-RoPE's (t, h, w)
+sections degenerate to temporal-only RoPE on the stubbed 1-D stream — noted
+as an adaptation in DESIGN.md."""
+
+from repro.core.sparse_matmul import SparsityConfig
+from repro.models.config import ArchConfig
+
+
+def config() -> ArchConfig:
+    return ArchConfig(
+        name="qwen2-vl-7b", family="vlm",
+        n_layers=28, d_model=3584, n_heads=28, n_kv=4, d_ff=18944,
+        vocab=152064, head_dim=128, rope_theta=1e6, qkv_bias=True,
+        input_mode="embeds",
+        sparsity=SparsityConfig(n=2, m=4, mode="srste"),
+        grad_accum=8,
+        serve_layout="tp",
+        remat_group=7,
+    )

@@ -1,0 +1,30 @@
+"""Architecture registry: ``--arch <id>`` resolution."""
+
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+from repro.models.config import ArchConfig
+
+_MODULES: Dict[str, str] = {
+    "mistral-large-123b": "repro.configs.mistral_large_123b",
+    "llama3.2-1b": "repro.configs.llama3_2_1b",
+    "gemma2-9b": "repro.configs.gemma2_9b",
+    "deepseek-67b": "repro.configs.deepseek_67b",
+    "zamba2-7b": "repro.configs.zamba2_7b",
+    "qwen2-vl-7b": "repro.configs.qwen2_vl_7b",
+    "falcon-mamba-7b": "repro.configs.falcon_mamba_7b",
+    "arctic-480b": "repro.configs.arctic_480b",
+    "deepseek-v2-lite-16b": "repro.configs.deepseek_v2_lite_16b",
+    "whisper-small": "repro.configs.whisper_small",
+}
+
+ALL_ARCHS: List[str] = list(_MODULES)
+
+
+def get_config(name: str, smoke: bool = False) -> ArchConfig:
+    if name not in _MODULES:
+        raise KeyError(f"unknown arch {name!r}; known: {ALL_ARCHS}")
+    cfg = importlib.import_module(_MODULES[name]).config()
+    return cfg.reduced() if smoke else cfg

@@ -1,0 +1,23 @@
+"""whisper-small [audio] — enc-dec, 12L each side, d768 12H (kv=12) dff3072
+v51865; conv frontend STUB (input_specs provides precomputed log-mel frame
+embeddings [B, 1500, d] per assignment).  [arXiv:2212.04356; unverified]
+
+The assigned seq shapes (4k train / 32k decode) far exceed Whisper's real
+448 decoder positions — they exercise the BACKBONE at the assigned shapes as
+the assignment prescribes (DESIGN.md §5)."""
+
+from repro.core.sparse_matmul import SparsityConfig
+from repro.models.config import ArchConfig
+
+
+def config() -> ArchConfig:
+    return ArchConfig(
+        name="whisper-small", family="audio",
+        n_layers=12, enc_layers=12, d_model=768, n_heads=12, n_kv=12,
+        d_ff=3072, vocab=51865, head_dim=64, act="gelu", qkv_bias=True,
+        enc_seq=1500, n_mels=80,
+        sparsity=SparsityConfig(n=2, m=4, mode="srste"),
+        grad_accum=2,
+        serve_layout="tp", train_layout="fulldp",
+        remat_group=4,
+    )

@@ -1,0 +1,24 @@
+"""zamba2-7b [hybrid] — 81L d3584, Mamba2 blocks (state 64, d_inner 7168,
+112 heads) + one SHARED attention+MLP block (32H MHA, dff14336) applied every
+6 mamba blocks; v32000.  [arXiv:2411.15242; unverified]
+
+Adaptation notes (DESIGN.md §Arch-applicability): the shared block uses a
+4096-token sliding window so the long_500k decode cell runs with a ring KV
+cache instead of a 500k dense cache; Zamba2's concat-input trick for the
+shared block is simplified to a plain residual application."""
+
+from repro.core.sparse_matmul import SparsityConfig
+from repro.models.config import ArchConfig
+
+
+def config() -> ArchConfig:
+    return ArchConfig(
+        name="zamba2-7b", family="hybrid",
+        n_layers=81, d_model=3584, n_heads=32, n_kv=32, d_ff=14336,
+        vocab=32000, head_dim=112, rope_theta=10000.0,
+        ssm_state=64, d_inner=7168, mamba_version=2, ssm_heads=112,
+        conv_kernel=4, attn_period=6, window=4096,
+        sparsity=SparsityConfig(n=2, m=4, mode="srste"),
+        grad_accum=8,
+        serve_layout="tp", ssm_chunk=64,
+    )

@@ -1,0 +1,10 @@
+"""Core: the paper's contribution — N:M structured sparsity as a composable
+JAX feature (format, matmul dispatch, training STE, SparseLinear)."""
+
+from repro.core.sparsity import (NMSparse, compress, decompress, nm_mask,
+                                 pack_indices, sparsify, storage_bytes,
+                                 unpack_indices, validate_nm)
+from repro.core.sparse_matmul import (SparsityConfig, masked_matmul, nm_matmul,
+                                      nm_matmul_ste, ste_sparsify)
+from repro.core.layers import (convert_to_compressed, linear_apply,
+                               linear_init)

@@ -1,0 +1,95 @@
+"""SparseLinear — the switch that makes any architecture N:M-sparse.
+
+Functional layer: ``linear_init`` builds the parameter pytree, ``linear_apply``
+runs it under a SparsityConfig.  Modes:
+
+  dense       plain dense weight
+  srste       dense weight, mask recomputed each step + straight-through grads
+  fixed       dense weight + frozen boolean mask (ASP fine-tuning)
+  compressed  NMSparse weight (serving; kernels consume it directly)
+
+``convert_to_compressed`` moves a trained (srste/fixed/dense) layer to the
+compressed serving format — the paper's offline pruning+packing step.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.sparse_matmul import (SparsityConfig, masked_matmul, nm_matmul,
+                                      nm_matmul_ste)
+from repro.core.sparsity import NMSparse, compress, nm_mask
+
+Params = Dict[str, Any]
+
+
+def linear_init(key: jax.Array, in_dim: int, out_dim: int,
+                cfg: SparsityConfig, dtype=jnp.bfloat16,
+                use_bias: bool = False, scale: Optional[float] = None) -> Params:
+    """Weight stored [out, in] (the paper's A-matrix layout)."""
+    scale = scale if scale is not None else in_dim ** -0.5
+    w = (jax.random.normal(key, (out_dim, in_dim), jnp.float32) * scale).astype(dtype)
+    p: Params = {"w": w}
+    if cfg.applies(in_dim, out_dim):
+        if cfg.mode == "fixed":
+            p["mask"] = nm_mask(w, cfg.n, cfg.m)
+        elif cfg.mode == "compressed":
+            sp = compress(w, cfg.n, cfg.m)
+            p = {"w_vals": sp.values, "w_idx": sp.indices}
+    if use_bias:
+        p["b"] = jnp.zeros((out_dim,), dtype)
+    return p
+
+
+def linear_apply(p: Params, x: jax.Array, cfg: SparsityConfig,
+                 in_dim: Optional[int] = None) -> jax.Array:
+    in_dim = in_dim if in_dim is not None else x.shape[-1]
+    if "w_vals" in p:  # compressed serving path
+        out_dim = p["w_vals"].shape[0]
+        sp = NMSparse(p["w_vals"], p["w_idx"], cfg.n, cfg.m, (out_dim, in_dim))
+        y = nm_matmul(x, sp, impl=cfg.impl,
+                      gather_compressed=cfg.gather_compressed)
+    else:
+        w = p["w"]
+        if cfg.applies(in_dim, w.shape[0]):
+            if cfg.mode == "srste":
+                y = nm_matmul_ste(x, w, cfg.n, cfg.m, cfg.srste_lam)
+            elif cfg.mode == "fixed":
+                y = masked_matmul(x, w, p["mask"])
+            elif cfg.mode == "compressed":
+                # dense params under a compressed policy (not yet converted):
+                # apply the N:M mask so the function matches the compressed
+                # path rather than silently running dense
+                from repro.core.sparsity import sparsify
+                y = jnp.einsum("...k,ok->...o", x, sparsify(w, cfg.n, cfg.m),
+                               preferred_element_type=jnp.float32).astype(x.dtype)
+            else:
+                y = jnp.einsum("...k,ok->...o", x, w,
+                               preferred_element_type=jnp.float32).astype(x.dtype)
+        else:
+            y = jnp.einsum("...k,ok->...o", x, w,
+                           preferred_element_type=jnp.float32).astype(x.dtype)
+    if "b" in p:
+        y = y + p["b"]
+    return y
+
+
+def convert_to_compressed(p: Params, cfg: SparsityConfig) -> Params:
+    """Trained layer -> compressed serving format (offline packing step).
+    Handles stacked weights ([L, out, in] / [E, out, in]) too."""
+    if "w_vals" in p:
+        return p
+    w = p["w"]
+    out_dim, in_dim = w.shape[-2], w.shape[-1]
+    if not cfg.applies(in_dim, out_dim):
+        return p
+    if "mask" in p:
+        w = w * p["mask"].astype(w.dtype)
+    sp = compress(w, cfg.n, cfg.m)
+    q = {"w_vals": sp.values, "w_idx": sp.indices}
+    if "b" in p:
+        q["b"] = p["b"]
+    return q

@@ -1,0 +1,170 @@
+"""Sparse matmul dispatch + straight-through training path.
+
+One entry point (``nm_matmul``) with several implementations:
+
+  ref              decompress -> dense einsum (oracle; kernels/ref.py)
+  xla              slot-loop decompress fused by XLA -> dense dot.  The CPU /
+                   dry-run path: numerically identical to the Pallas kernel
+                   (same decompress order, f32 accumulation).
+  xla_gather       gather-MAC formulation (Alg 6 semantics) — N/M flops; used
+                   for small-batch decode on CPU where XLA executes the real
+                   FLOP reduction.
+  pallas           TPU kernel (kernels/nm_spmm.py)
+  pallas_interpret TPU kernel body executed in interpret mode (CPU validation)
+
+Training uses ``nm_matmul_ste``: SR-STE (Zhou et al., paper ref [3]) —
+the N:M mask is recomputed from the dense weights every step, gradients pass
+straight through, and pruned weights receive a decay pull so the mask anneals.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.sparsity import NMSparse, nm_mask
+from repro.kernels import ops as kops
+from repro.kernels import ref as kref
+
+Impl = str  # 'auto' | 'ref' | 'xla' | 'xla_gather' | 'pallas' | 'pallas_interpret'
+
+
+@dataclasses.dataclass(frozen=True)
+class SparsityConfig:
+    """Per-model sparsity policy (threaded through every SparseLinear)."""
+    n: int = 2
+    m: int = 4
+    enabled: bool = True
+    mode: str = "srste"          # 'srste' | 'fixed' | 'compressed' | 'dense'
+    impl: Impl = "auto"
+    srste_lam: float = 2e-4      # SR-STE decay on pruned weights
+    min_dim: int = 128           # skip tiny projections
+    # serve-path collective experiment (§Perf falcon_gatherc/prefill
+    # iterations): force the FSDP all-gather to move the COMPRESSED stream by
+    # pinning the dense view to TP-only sharding.  MEASURED VERDICT: neutral
+    # for decode (XLA already gathers the compressed operands), and a large
+    # REGRESSION for prefill (the pinned dense view replicates decompress
+    # traffic across the data axis) — so the shipped default is False and the
+    # decode-serving win comes from TP-only weight rules instead
+    # (falcon_tponly, 4.5x).
+    gather_compressed: bool = False
+
+    def applies(self, in_dim: int, out_dim: int) -> bool:
+        return (self.enabled and self.mode != "dense"
+                and in_dim % self.m == 0
+                and min(in_dim, out_dim) >= self.min_dim)
+
+
+def _decompress_xla(values: jax.Array, indices: jax.Array, n: int, m: int,
+                    k: int) -> jax.Array:
+    """Slot-loop decompress (same order as the kernel's VMEM decompress);
+    all temporaries [O, K] and elementwise -> fuses to one XLA pass."""
+    o, nnz = values.shape
+    nb = k // m
+    vals3 = values.reshape(o, nb, n)
+    idx3 = indices.reshape(o, nb, n).astype(jnp.int32)
+    kpos = jax.lax.broadcasted_iota(jnp.int32, (o, k), 1) % m
+    dense = jnp.zeros((o, k), dtype=values.dtype)
+    for s in range(n):
+        val_s = jnp.repeat(vals3[:, :, s], m, axis=1)
+        idx_s = jnp.repeat(idx3[:, :, s], m, axis=1)
+        dense = dense + jnp.where(idx_s == kpos, val_s, jnp.zeros((), values.dtype))
+    return dense
+
+
+def _xwt_xla(x, values, indices, n, m, gather_compressed=True):
+    w = _decompress_xla(values, indices, n, m, x.shape[-1])
+    if gather_compressed:
+        # pin the dense view to TP-only sharding: the cross-FSDP transfer
+        # then happens on the compressed operands (0.56x bytes at 2:4)
+        from repro.dist.api import constrain
+        w = constrain(w, "tp", None)
+    return jnp.einsum("...k,ok->...o", x, w,
+                      preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+def _xwt_xla_gather(x, values, indices, n, m):
+    """Gather-MAC: true N/M flops (Alg 6 executed by XLA)."""
+    o, nnz = values.shape
+    blk = (jnp.arange(nnz, dtype=jnp.int32) // n) * m
+    full_idx = blk[None, :] + indices.astype(jnp.int32)      # [o, nnz]
+    xg = jnp.take(x, full_idx, axis=-1)                      # [..., o, nnz]
+    y = jnp.einsum("...oe,oe->...o", xg.astype(jnp.float32),
+                   values.astype(jnp.float32))
+    return y.astype(x.dtype)
+
+
+def default_impl(x_shape: Tuple[int, ...]) -> Impl:
+    backend = jax.default_backend()
+    if backend == "tpu":
+        return "pallas"
+    return "xla"
+
+
+def nm_matmul(x: jax.Array, sp: NMSparse, impl: Impl = "auto",
+              gather_compressed: bool = True) -> jax.Array:
+    """Y = x @ W_sp.T (layer orientation). x [..., K], sp dense_shape [O, K]."""
+    n, m = sp.n, sp.m
+    if impl == "auto":
+        impl = default_impl(x.shape)
+    if impl == "ref":
+        lead = x.shape[:-1]
+        y = kref.nm_xwt_ref(x.reshape(-1, x.shape[-1]), sp.values, sp.indices, n, m)
+        return y.reshape(*lead, -1)
+    if impl == "xla":
+        return _xwt_xla(x, sp.values, sp.indices, n, m,
+                        gather_compressed=gather_compressed)
+    if impl == "xla_gather":
+        return _xwt_xla_gather(x, sp.values, sp.indices, n, m)
+    if impl == "pallas":
+        return kops.nm_xwt(x, sp.values, sp.indices, n, m)
+    if impl == "pallas_interpret":
+        return kops.nm_xwt(x, sp.values, sp.indices, n, m, interpret=True)
+    if impl in ("spmv", "spmv_gather"):
+        return kops.nm_spmv(x, sp.values, sp.indices, n, m, mode="gather")
+    raise ValueError(f"unknown impl {impl!r}")
+
+
+# ---------------------------------------------------------------------------
+# SR-STE sparse training: forward through the pruned weights, straight-through
+# dense gradient + decay on the pruned complement.  ``ste_sparsify`` acts on
+# the *weight only*, so it composes with any contraction (plain linears, MoE
+# expert einsums, conv-as-GEMM) — the mask recompute + decay live in its vjp.
+# ---------------------------------------------------------------------------
+
+@partial(jax.custom_vjp, nondiff_argnums=(1, 2, 3))
+def ste_sparsify(w: jax.Array, n: int, m: int, lam: float) -> jax.Array:
+    return w * nm_mask(w, n, m).astype(w.dtype)
+
+
+def _stes_fwd(w, n, m, lam):
+    mask = nm_mask(w, n, m).astype(w.dtype)
+    return w * mask, (w, mask)
+
+
+def _stes_bwd(n, m, lam, res, g):
+    w, mask = res
+    # straight-through dense gradient + SR-STE decay pulling pruned weights
+    # toward zero so the mask anneals stably.
+    dw = g + (lam * ((1.0 - mask) * w)).astype(g.dtype)
+    return (dw.astype(w.dtype),)
+
+
+ste_sparsify.defvjp(_stes_fwd, _stes_bwd)
+
+
+def nm_matmul_ste(x: jax.Array, w: jax.Array, n: int, m: int,
+                  lam: float) -> jax.Array:
+    """y = x @ sparsify(w).T with straight-through training semantics."""
+    return jnp.einsum("...k,ok->...o", x, ste_sparsify(w, n, m, lam),
+                      preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+def masked_matmul(x: jax.Array, w: jax.Array, mask: jax.Array) -> jax.Array:
+    """Fixed-mask (ASP-style fine-tuning) path; autodiff gives masked grads."""
+    return jnp.einsum("...k,ok->...o", x, w * mask.astype(w.dtype),
+                      preferred_element_type=jnp.float32).astype(x.dtype)

@@ -1,0 +1,73 @@
+"""Deterministic, resumable synthetic data pipeline.
+
+Every batch is a pure function of (seed, step): restart-safe (skip-ahead is
+``state = step``), shard-safe (the same batch is generated on every host and
+sharded by pjit's in_shardings), and supports all three input modes the
+assigned archs need (tokens / embeds / enc-dec).
+
+A real deployment would swap this for a tokenized corpus reader with the same
+interface — the checkpoint manager persists ``state()`` either way.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import ArchConfig
+
+
+class SyntheticLMData:
+    def __init__(self, cfg: ArchConfig, batch: int, seq: int, seed: int = 0):
+        self.cfg, self.batch, self.seq, self.seed = cfg, batch, seq, seed
+        self._step = 0
+
+    # ---- iterator protocol with explicit, checkpointable state ----
+    def state(self) -> int:
+        return self._step
+
+    def restore(self, state: int) -> None:
+        self._step = int(state)
+
+    def __iter__(self):
+        return self
+
+    def __next__(self) -> Dict[str, Any]:
+        b = self.batch_at(self._step)
+        self._step += 1
+        return b
+
+    def batch_at(self, step: int) -> Dict[str, Any]:
+        cfg = self.cfg
+        rng = np.random.default_rng(
+            np.random.SeedSequence([self.seed, step]))
+        out: Dict[str, Any] = {}
+        toks = rng.integers(0, cfg.vocab, (self.batch, self.seq + 1),
+                            dtype=np.int32)
+        if cfg.input_mode == "embeds":
+            out["embeds"] = rng.standard_normal(
+                (self.batch, self.seq, cfg.d_model)).astype(np.float32)
+            out["labels"] = toks[:, 1:]
+        else:
+            out["tokens"] = toks[:, :-1]
+            out["labels"] = toks[:, 1:]
+        if cfg.family == "audio":
+            out["enc_embeds"] = rng.standard_normal(
+                (self.batch, cfg.enc_seq, cfg.d_model)).astype(np.float32)
+        return out
+
+
+def batch_specs(cfg: ArchConfig, batch: int, seq: int) -> Dict[str, Any]:
+    """Logical sharding specs for a training batch (mirrors batch_at)."""
+    out: Dict[str, Any] = {}
+    if cfg.input_mode == "embeds":
+        out["embeds"] = ("act_batch", None, None)
+    else:
+        out["tokens"] = ("act_batch", None)
+    out["labels"] = ("act_batch", None)
+    if cfg.family == "audio":
+        out["enc_embeds"] = ("act_batch", None, None)
+    return out

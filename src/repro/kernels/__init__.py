@@ -1,0 +1,11 @@
+"""Pallas TPU kernels for N:M sparse matmul (+ pure-jnp oracles).
+
+nm_spmm: decompress-in-VMEM + MXU dot (prefill/training regime)
+nm_spmv: VMEM-resident activations + indirect gather-MAC (decode regime —
+         the vindexmac dataflow)
+"""
+
+from repro.kernels import ops, ref
+from repro.kernels.nm_spmm import nm_spmm_kernel, nm_xwt_kernel
+from repro.kernels.nm_spmv import nm_spmv_kernel
+from repro.kernels.flash_attention import flash_attention_kernel, flash_traffic

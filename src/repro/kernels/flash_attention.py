@@ -1,0 +1,126 @@
+"""Pallas TPU kernel: flash attention (causal / windowed / softcapped).
+
+Beyond-paper optimization (EXPERIMENTS.md §Perf): the dry-run roofline shows
+the pure-JAX chunked attention dominated by HBM traffic of the [q_chunk,
+kv_chunk] score/probability tensors at every fusion boundary — the classic
+gap a fused attention kernel closes by keeping the whole online-softmax
+update in VMEM.  Same vindexmac philosophy as nm_spmm: bound the working set,
+pin it in fast memory, never let the intermediate touch HBM.
+
+Layout: q/k/v [BH, S, D] (batch*heads flattened; GQA is expanded by the ops
+wrapper).  Grid (BH, q_blocks, kv_blocks); kv is the innermost (sequential)
+axis with m/l/acc scratch carried across kv steps.  Causal masking skips
+nothing structurally (blocks above the diagonal still run, fully masked) —
+block-skipping is a further optimization left measured in §Perf.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK_FA = (512, 1024)   # (bq, bk)
+_NEG = -1e30
+
+
+def _fa_body(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+             scale: float, causal: bool, window: Optional[int],
+             cap: Optional[float], bq: int, bk: int, k_steps: int,
+             q_off: int, out_dtype):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0].astype(jnp.float32)                  # [bq, d]
+    k = k_ref[0].astype(jnp.float32)                  # [bk, d]
+    v = v_ref[0].astype(jnp.float32)                  # [bk, dv]
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    if cap is not None:
+        s = cap * jnp.tanh(s / cap)
+
+    qpos = q_off + qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    kpos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    mask = jnp.ones((bq, bk), jnp.bool_)
+    if causal:
+        mask &= qpos >= kpos
+    if window is not None:
+        mask &= qpos - kpos < window
+    s = jnp.where(mask, s, _NEG)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1))
+    p = jnp.where(mask, jnp.exp(s - m_new[:, None]), 0.0)
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + p.sum(axis=-1)
+    acc_ref[...] = acc_ref[...] * corr[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(ki == k_steps - 1)
+    def _store():
+        o_ref[0] = (acc_ref[...]
+                    / jnp.maximum(l_ref[...], 1e-30)[:, None]).astype(out_dtype)
+
+
+def flash_attention_kernel(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                           causal: bool = True, window: Optional[int] = None,
+                           cap: Optional[float] = None,
+                           scale: Optional[float] = None,
+                           block: Tuple[int, int] = DEFAULT_BLOCK_FA,
+                           interpret: bool = False) -> jax.Array:
+    """q [BH, Sq, D], k [BH, Sk, D], v [BH, Sk, Dv] -> [BH, Sq, Dv].
+    Sq/Sk must divide by the block sizes (ops wrapper pads)."""
+    bh, sq, d = q.shape
+    _, sk, dv = v.shape
+    bq, bk = block
+    scale = scale if scale is not None else d ** -0.5
+    k_steps = sk // bk
+    grid = (bh, sq // bq, k_steps)
+
+    return pl.pallas_call(
+        functools.partial(_fa_body, scale=scale, causal=causal, window=window,
+                          cap=cap, bq=bq, bk=bk, k_steps=k_steps,
+                          q_off=sk - sq, out_dtype=q.dtype),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bk, d), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, bk, dv), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, dv), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, sq, dv), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq, dv), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(q, k, v)
+
+
+def flash_traffic(bh: int, sq: int, sk: int, d: int, dv: int, *,
+                  dtype_bytes: int = 2,
+                  block: Tuple[int, int] = DEFAULT_BLOCK_FA) -> dict:
+    """HBM traffic model (for the roofline's kernel adjustment): q read once
+    per kv sweep is amortized (stays in VMEM across the inner axis); k/v
+    re-streamed per q block; scores NEVER touch HBM — that is the point."""
+    bq, bk = block
+    q_bytes = bh * sq * d * dtype_bytes
+    kv_bytes = (sq // bq) * bh * sk * (d + dv) * dtype_bytes
+    out_bytes = bh * sq * dv * dtype_bytes
+    flops = 2.0 * bh * sq * sk * (d + dv)
+    return dict(hbm_bytes=q_bytes + kv_bytes + out_bytes, flops=flops,
+                q_bytes=q_bytes, kv_bytes=kv_bytes, out_bytes=out_bytes)

@@ -1,0 +1,250 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512").strip()
+# ^ MUST precede any jax import/init: jax locks the device count on first use.
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this builds abstract params/optimizer/cache/input trees
+(ShapeDtypeStruct — nothing is allocated), jits the step with explicit
+NamedShardings, lowers, compiles, and records:
+  memory_analysis()  — proves the per-device footprint fits,
+  cost_analysis()    — FLOPs / bytes for §Roofline,
+  parsed collectives — collective bytes per type (trip-count-weighted).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch llama3.2-1b \
+      --shape train_4k --mesh both --out results/dryrun.json
+  PYTHONPATH=src python -m repro.launch.dryrun --arch all --shape all
+"""
+
+import argparse
+import json
+import time
+import traceback
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ALL_ARCHS, get_config
+from repro.dist.api import axis_rules, make_shardings, DEFAULT_RULES, MULTIPOD_RULES
+from repro.launch.hlo_cost import analyze_hlo
+from repro.launch.mesh import make_production_mesh
+from repro.launch.roofline import (RooflineTerms, model_flops_for,
+                                   param_counts_exact, sparse_weight_bytes)
+from repro.launch.shapes import ALL_SHAPES, SHAPES, cell_supported
+from repro.launch import steps as steps_mod
+from repro.models.config import param_count
+from repro.optim import AdamWConfig
+
+
+def _mem_analysis(compiled) -> Dict[str, Any]:
+    try:
+        ma = compiled.memory_analysis()
+    except Exception as e:  # backend without support
+        return {"error": str(e)}
+    out = {}
+    for field in ("argument_size_in_bytes", "output_size_in_bytes",
+                  "temp_size_in_bytes", "generated_code_size_in_bytes",
+                  "alias_size_in_bytes"):
+        v = getattr(ma, field, None)
+        if v is not None:
+            out[field] = int(v)
+    if not out:
+        out["repr"] = repr(ma)
+    return out
+
+
+def _cost(compiled) -> Dict[str, float]:
+    try:
+        ca = compiled.cost_analysis()
+    except Exception as e:
+        return {"error": str(e)}
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    return {k: float(v) for k, v in ca.items()
+            if isinstance(v, (int, float)) and k in
+            ("flops", "bytes accessed", "transcendentals",
+             "bytes accessed operand 0 {}", "optimal_seconds")}
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             save_hlo: str = "", mutate=None,
+             rules_update: Dict[str, Any] | None = None,
+             pregather: bool = False) -> Dict[str, Any]:
+    """mutate: optional cfg -> cfg transform (hillclimb variants);
+    rules_update: logical-rule overrides (e.g. {'fsdp': None} for TP-only
+    serving); pregather: gather-once FSDP accumulation (§Perf)."""
+    cfg = get_config(arch)
+    if mutate is not None:
+        cfg = mutate(cfg)
+    shape = SHAPES[shape_name]
+    ok, reason = cell_supported(cfg, shape_name)
+    rec: Dict[str, Any] = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "kind": shape.kind,
+    }
+    if not ok:
+        rec.update(status="SKIP", reason=reason)
+        return rec
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rules = dict(MULTIPOD_RULES if multi_pod else DEFAULT_RULES)
+    # §Perf-confirmed layout policies (see ArchConfig.serve_layout/train_layout)
+    # tp-only serving pays off when the batch amortizes the replicated weight
+    # read; at batch=1 (long_500k) 2D sharding spreads the weight stream over
+    # ALL chips and wins — measured, see §Perf iteration 10.
+    if (shape.kind != "train" and cfg.serve_layout == "tp"
+            and shape.batch >= 8):
+        rules["fsdp"] = None
+    if shape.kind == "train" and cfg.train_layout == "fulldp":
+        rules.update(act_batch=(("pod", "data", "model") if multi_pod
+                                else ("data", "model")),
+                     fsdp=None, tp=None, act_heads=None, act_vocab=None,
+                     act_seq_sp=None, act_ep=None)
+    if rules_update:
+        rules.update(rules_update)
+    chips = mesh.size
+    t0 = time.time()
+
+    with axis_rules(mesh, rules):
+        if shape.kind == "train":
+            pshapes, pspecs, _ = steps_mod.abstract_params(cfg)
+            ocfg = AdamWConfig()
+            oshapes, ospecs = steps_mod.abstract_opt_state(pshapes, ocfg, pspecs)
+            bshapes, bspecs = steps_mod.train_input_specs(
+                cfg, shape.batch, shape.seq)
+            dp = 1
+            for ax in (rules.get("act_batch") or ()):
+                dp *= mesh.shape[ax]
+            accum = max(1, min(cfg.grad_accum, shape.batch // max(dp, 1)))
+            step_fn = steps_mod.make_train_step(cfg, ocfg, param_specs=pspecs,
+                                                accum=accum,
+                                                pregather_fsdp=pregather)
+            rec["grad_accum"] = accum
+            in_sh = (make_shardings(pspecs, mesh, rules, pshapes),
+                     make_shardings(ospecs, mesh, rules, oshapes),
+                     make_shardings(bspecs, mesh, rules, bshapes),
+                     make_shardings(None, mesh, rules))
+            out_sh = (in_sh[0], in_sh[1], None)
+            args = (pshapes, oshapes, bshapes,
+                    jax.ShapeDtypeStruct((), jnp.int32))
+            jitted = jax.jit(step_fn, in_shardings=in_sh,
+                             out_shardings=out_sh)
+        elif shape.kind == "prefill":
+            pshapes, pspecs, cserve = steps_mod.abstract_params(cfg, serve=True)
+            bshapes, bspecs = steps_mod.train_input_specs(
+                cserve, shape.batch, shape.seq)
+            bshapes.pop("labels")
+            bspecs.pop("labels")
+            step_fn = steps_mod.make_prefill_step(cserve)
+            in_sh = (make_shardings(pspecs, mesh, rules, pshapes),
+                     make_shardings(bspecs, mesh, rules, bshapes))
+            args = (pshapes, bshapes)
+            jitted = jax.jit(step_fn, in_shardings=in_sh)
+        else:  # decode
+            pshapes, pspecs, cserve = steps_mod.abstract_params(cfg, serve=True)
+            cshapes, cspecs = steps_mod.abstract_caches(
+                cserve, shape.batch, shape.seq)
+            ishapes, ispecs = steps_mod.decode_input_specs(cserve, shape.batch)
+            step_fn = steps_mod.make_decode_step(cserve)
+            csh = make_shardings(cspecs, mesh, rules, cshapes)
+            in_sh = (make_shardings(pspecs, mesh, rules, pshapes), csh,
+                     make_shardings(ispecs["tokens"], mesh, rules,
+                                    ishapes["tokens"]),
+                     make_shardings(None, mesh, rules))
+            out_sh = (None, csh)
+            args = (pshapes, cshapes, ishapes["tokens"], ishapes["pos"])
+            jitted = jax.jit(step_fn, in_shardings=in_sh, out_shardings=out_sh)
+
+        lowered = jitted.lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+        hlo = compiled.as_text()
+        hc = analyze_hlo(hlo)      # trip-count-weighted flops/bytes/collectives
+        if save_hlo:
+            with open(save_hlo, "w") as f:
+                f.write(hlo)
+        cost = _cost(compiled)     # raw XLA numbers (loop bodies counted once)
+        mem = _mem_analysis(compiled)
+
+        n_total, n_active = param_counts_exact(pshapes, cfg)
+        mf = model_flops_for(cfg, shape.kind, shape.batch, shape.seq, n_active)
+        terms = RooflineTerms(
+            flops=hc["flops"],
+            bytes_accessed=hc["bytes"],
+            collective_bytes=hc["collective_bytes"],
+            chips=chips, model_flops=mf)
+        sw = sparse_weight_bytes(pshapes, cfg.sparsity)
+
+        rec.update(
+            status="OK",
+            chips=chips,
+            lower_s=round(t_lower, 1), compile_s=round(t_compile, 1),
+            params_total=n_total, params_active=n_active,
+            hlo_cost={k: hc[k] for k in
+                      ("flops", "bytes", "collective_bytes",
+                       "collectives_by_type", "op_counts", "loops")},
+            xla_cost_raw=cost, memory=mem,
+            roofline=terms.as_dict(),
+            sparse_weights=sw,
+        )
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="results/dryrun.json")
+    ap.add_argument("--save-hlo", default="")
+    args = ap.parse_args()
+
+    archs = ALL_ARCHS if args.arch == "all" else args.arch.split(",")
+    shapes = ALL_SHAPES if args.shape == "all" else args.shape.split(",")
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    records = []
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                tag = f"{arch} x {shape} x {'2x16x16' if mp else '16x16'}"
+                try:
+                    rec = run_cell(arch, shape, mp, save_hlo=args.save_hlo)
+                except Exception as e:
+                    rec = {"arch": arch, "shape": shape,
+                           "mesh": "2x16x16" if mp else "16x16",
+                           "status": "FAIL", "error": f"{type(e).__name__}: {e}",
+                           "trace": traceback.format_exc()[-2000:]}
+                records.append(rec)
+                st = rec["status"]
+                extra = ""
+                if st == "OK":
+                    r = rec["roofline"]
+                    extra = (f" dom={r['dominant']} "
+                             f"frac={r['roofline_fraction']:.3f} "
+                             f"compile={rec['compile_s']}s")
+                elif st == "FAIL":
+                    extra = " " + rec["error"][:120]
+                print(f"[{st}] {tag}{extra}", flush=True)
+
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    with open(args.out, "w") as f:
+        json.dump(records, f, indent=1)
+    n_ok = sum(r["status"] == "OK" for r in records)
+    n_skip = sum(r["status"] == "SKIP" for r in records)
+    n_fail = sum(r["status"] == "FAIL" for r in records)
+    print(f"\nDONE: {n_ok} OK, {n_skip} SKIP, {n_fail} FAIL -> {args.out}")
+    if n_fail:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

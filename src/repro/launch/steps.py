@@ -1,0 +1,170 @@
+"""Step functions the launcher jits: train_step (with gradient accumulation),
+prefill_step, decode_step (greedy serving), and their input/sharding specs.
+
+``abstract_state`` builds ShapeDtypeStruct pytrees + logical specs without
+allocating anything (the eval_shape + trace-time-capture pattern) — this is
+what lets the dry-run lower 480B-param models on one CPU.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.data.pipeline import batch_specs
+from repro.dist.api import constrain
+from repro.models import transformer as tfm
+from repro.models.config import ArchConfig
+from repro.optim import AdamWConfig, adamw_init, adamw_update, opt_state_specs
+from repro.optim.schedule import warmup_cosine
+
+
+# ------------------------------------------------------------------ steps
+
+def make_train_step(cfg: ArchConfig, ocfg: AdamWConfig, base_lr: float = 3e-4,
+                    warmup: int = 100, total: int = 10000,
+                    param_specs=None, accum: Optional[int] = None,
+                    pregather_fsdp: bool = False):
+    """(params, opt_state, batch, step) -> (params, opt_state, metrics).
+
+    param_specs (logical-name tuples mirroring params) pins gradient /
+    accumulator shardings to the param shardings — without it, SPMD can lose
+    the sharding of per-layer dW transients inside the accumulation scan and
+    replicate multi-GB gradient tensors per device.
+
+    accum overrides cfg.grad_accum (the launcher clamps it so each
+    microbatch still covers the data-parallel axis — a microbatch smaller
+    than dp pads/replicates and silently wastes the whole mesh).
+
+    pregather_fsdp (§Perf): all-gather the FSDP-sharded weights ONCE before
+    the accumulation loop and keep the gradient accumulator unreduced
+    (fsdp-replicated) so the reduce-scatter happens once after it — collective
+    volume becomes independent of the accumulation depth.  Costs one
+    fsdp-unsharded copy of params (bf16) + grads (f32) per device."""
+    accum = max(accum if accum is not None else cfg.grad_accum, 1)
+
+    def _strip_fsdp(s):
+        return tuple(None if n == "fsdp" else n for n in s)
+
+    def pin_tree(tree, strip_fsdp: bool = False):
+        if param_specs is None:
+            return tree
+        def c(g, s):
+            if not isinstance(s, tuple):
+                return g
+            return constrain(g, *(_strip_fsdp(s) if strip_fsdp else s))
+        return jax.tree.map(c, tree, param_specs,
+                            is_leaf=lambda l: isinstance(l, tuple))
+
+    def loss_of(p, mb):
+        return tfm.loss_fn(p, cfg, mb)
+
+    def train_step(params, opt_state, batch, step):
+        if accum > 1:
+            mbs = jax.tree.map(
+                lambda a: a.reshape(accum, a.shape[0] // accum, *a.shape[1:]),
+                batch)
+            loop_params = (pin_tree(params, strip_fsdp=True)
+                           if pregather_fsdp else params)
+
+            def acc_body(carry, mb):
+                gsum, lsum = carry
+                (loss, _), g = jax.value_and_grad(loss_of, has_aux=True)(
+                    loop_params, mb)
+                gsum = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), gsum, g)
+                return (pin_tree(gsum, strip_fsdp=pregather_fsdp),
+                        lsum + loss), None
+
+            g0 = pin_tree(jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params),
+                strip_fsdp=pregather_fsdp)
+            (gsum, lsum), _ = jax.lax.scan(acc_body, (g0, 0.0), mbs)
+            grads = pin_tree(jax.tree.map(lambda g: g / accum, gsum))
+            loss = lsum / accum
+        else:
+            (loss, _), grads = jax.value_and_grad(loss_of, has_aux=True)(
+                params, batch)
+            grads = pin_tree(grads)
+        lr = warmup_cosine(step, base_lr, warmup, total)
+        new_params, new_opt, gnorm = adamw_update(grads, opt_state, params,
+                                                  lr, ocfg)
+        return new_params, new_opt, {"loss": loss, "gnorm": gnorm, "lr": lr}
+
+    return train_step
+
+
+def make_prefill_step(cfg: ArchConfig):
+    def prefill_step(params, batch):
+        logits, caches = tfm.prefill(params, cfg, batch)
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32), caches
+    return prefill_step
+
+
+def make_decode_step(cfg: ArchConfig):
+    def decode_step(params, caches, tokens, pos):
+        logits, new_caches = tfm.decode_step(params, cfg, caches, tokens, pos)
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32), new_caches
+    return decode_step
+
+
+# -------------------------------------------------- abstract state + specs
+
+def _shape_of(fn, *args):
+    """eval_shape that also captures non-array aux emitted during tracing."""
+    cap = {}
+
+    def wrapped(*a):
+        out, aux = fn(*a)
+        cap["aux"] = aux
+        return out
+
+    shapes = jax.eval_shape(wrapped, *args)
+    return shapes, cap["aux"]
+
+
+def abstract_params(cfg: ArchConfig, serve: bool = False):
+    """ShapeDtypeStruct params + logical specs (no allocation)."""
+    c = cfg
+    if serve:
+        c = cfg.replace(sparsity=dataclasses.replace(
+            cfg.sparsity, mode="compressed", impl="xla"))
+    key = jax.random.PRNGKey(0)
+    shapes, specs = _shape_of(lambda k: tfm.init_model(k, c), key)
+    return shapes, specs, c
+
+
+def abstract_caches(cfg: ArchConfig, batch: int, max_len: int):
+    shapes, specs = _shape_of(
+        lambda _: tfm.init_caches(cfg, batch, max_len), jnp.zeros(()))
+    return shapes, specs
+
+
+def abstract_opt_state(params_shapes, ocfg: AdamWConfig, param_specs):
+    shapes = jax.eval_shape(lambda p: adamw_init(p, ocfg), params_shapes)
+    return shapes, opt_state_specs(param_specs, ocfg)
+
+
+def train_input_specs(cfg: ArchConfig, batch: int, seq: int):
+    """ShapeDtypeStructs + logical specs for one global training batch."""
+    shapes: Dict[str, Any] = {}
+    if cfg.input_mode == "embeds":
+        shapes["embeds"] = jax.ShapeDtypeStruct((batch, seq, cfg.d_model),
+                                                jnp.float32)
+    else:
+        shapes["tokens"] = jax.ShapeDtypeStruct((batch, seq), jnp.int32)
+    shapes["labels"] = jax.ShapeDtypeStruct((batch, seq), jnp.int32)
+    if cfg.family == "audio":
+        shapes["enc_embeds"] = jax.ShapeDtypeStruct(
+            (batch, cfg.enc_seq, cfg.d_model), jnp.float32)
+    return shapes, batch_specs(cfg, batch, seq)
+
+
+def decode_input_specs(cfg: ArchConfig, batch: int):
+    return ({"tokens": jax.ShapeDtypeStruct((batch,), jnp.int32),
+             "pos": jax.ShapeDtypeStruct((), jnp.int32)},
+            {"tokens": ("act_batch",), "pos": None})

@@ -1,0 +1,6 @@
+"""Model substrate: attention (GQA/MLA/local-global), MoE, Mamba1/2, enc-dec,
+CNN-as-GEMM — every matmul-bearing projection is a SparseLinear."""
+
+from repro.models.config import ArchConfig, param_count
+from repro.models.transformer import (decode_step, forward, init_caches,
+                                      init_model, loss_fn, prefill)

@@ -1,0 +1,347 @@
+"""Attention: GQA (+ local/global, softcap), MLA, cross-attention, KV caches.
+
+Prefill/training uses a chunked online-softmax attention (pure JAX
+flash-attention formulation): memory is O(q_chunk * kv_chunk) per step instead
+of O(S^2), which is what lets the 32k-prefill shapes compile with sane
+footprints.  Decode is a single-token step against a preallocated cache.
+
+All projections are SparseLinear — the paper's N:M technique applied to the
+attention GEMMs.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.api import constrain
+from repro.models.common import (Params, apply_rope, rope_angles, softcap,
+                                 sp_linear_apply, sp_linear_init)
+from repro.models.config import ArchConfig
+
+_NEG = -1e30
+
+
+def _pick_chunk(s: int, want: int) -> int:
+    c = min(want, s)
+    while s % c:
+        c -= 1
+    return c
+
+
+def chunked_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                      causal: bool = True, window: Optional[int] = None,
+                      cap: Optional[float] = None, scale: Optional[float] = None,
+                      q_chunk: int = 512, kv_chunk: int = 1024,
+                      chain_bf16: bool = False) -> jax.Array:
+    """Online-softmax attention.
+
+    q [B, Sq, H, Dq], k [B, Sk, KVH, Dq], v [B, Sk, KVH, Dv]; H % KVH == 0.
+    Returns [B, Sq, H, Dv].  Assumes q tokens occupy positions
+    Sk - Sq … Sk - 1 (training: Sq == Sk).
+    """
+    b, sq, h, dq = q.shape
+    _, sk, kvh, _ = k.shape
+    dv = v.shape[-1]
+    g = h // kvh
+    scale = scale if scale is not None else dq ** -0.5
+    cq = _pick_chunk(sq, q_chunk)
+    ck = _pick_chunk(sk, kv_chunk)
+    nq, nk = sq // cq, sk // ck
+    q_off = sk - sq
+
+    qg = q.reshape(b, nq, cq, kvh, g, dq).transpose(1, 0, 3, 4, 2, 5)
+    kc = k.reshape(b, nk, ck, kvh, dq).transpose(1, 0, 3, 2, 4)
+    vc = v.reshape(b, nk, ck, kvh, dv).transpose(1, 0, 3, 2, 4)
+
+    def q_step(_, qi_qc):
+        qi, qcnk = qi_qc                     # qcnk [b, kvh, g, cq, dq]
+        qpos = q_off + qi * cq + jnp.arange(cq)
+
+        def kv_step(carry, ki_kv):
+            m, l, acc = carry
+            ki, kck, vck = ki_kv             # kck [b, kvh, ck, dq]
+            kpos = ki * ck + jnp.arange(ck)
+            # chain_bf16 (§Perf): the [cq, ck] tensors are the dominant HBM
+            # stream of the unfused attention — keep them bf16 (m/l stats and
+            # accumulations stay f32; exp(s - m) is scale-normalized so bf16
+            # resolution is adequate).
+            cdt = jnp.bfloat16 if chain_bf16 else jnp.float32
+            s = jnp.einsum("bhgqd,bhkd->bhgqk", qcnk.astype(jnp.float32),
+                           kck.astype(jnp.float32),
+                           preferred_element_type=jnp.float32) * scale
+            s = softcap(s, cap)
+            mask = jnp.ones((cq, ck), bool)
+            if causal:
+                mask &= qpos[:, None] >= kpos[None, :]
+            if window is not None:
+                mask &= qpos[:, None] - kpos[None, :] < window
+            s = jnp.where(mask, s, _NEG).astype(cdt)
+            m_new = jnp.maximum(m, s.max(axis=-1).astype(jnp.float32))
+            p = jnp.where(mask, jnp.exp(s.astype(jnp.float32)
+                                        - m_new[..., None]), 0.0).astype(cdt)
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.astype(jnp.float32).sum(axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bhgqk,bhkd->bhgqd", p.astype(jnp.float32),
+                vck.astype(jnp.float32),
+                preferred_element_type=jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((b, kvh, g, cq), _NEG, jnp.float32)
+        l0 = jnp.zeros((b, kvh, g, cq), jnp.float32)
+        a0 = jnp.zeros((b, kvh, g, cq, dv), jnp.float32)
+        # remat the kv step: without it, autodiff saves the [cq, ck]
+        # probability tile of EVERY (qi, ki) pair — S^2 residuals, the exact
+        # blow-up flash attention's backward recompute exists to avoid.
+        (m, l, acc), _ = jax.lax.scan(
+            jax.checkpoint(kv_step), (m0, l0, a0), (jnp.arange(nk), kc, vc))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return None, out                      # [b, kvh, g, cq, dv]
+
+    _, outs = jax.lax.scan(jax.checkpoint(q_step), None, (jnp.arange(nq), qg))
+    out = outs.transpose(1, 0, 4, 2, 3, 5).reshape(b, sq, h, dv)
+    return out.astype(v.dtype)
+
+
+# ------------------------------------------------------------------------ GQA
+
+def gqa_init(key, cfg: ArchConfig, dtype):
+    d, hd, h, kv = cfg.d_model, cfg.hd(), cfg.n_heads, cfg.n_kv
+    ks = jax.random.split(key, 4)
+    sp = cfg.sparsity
+    p, s = {}, {}
+    p["wq"], s["wq"] = sp_linear_init(ks[0], d, h * hd, sp, dtype,
+                                      ("tp", "fsdp"), cfg.qkv_bias)
+    p["wk"], s["wk"] = sp_linear_init(ks[1], d, kv * hd, sp, dtype,
+                                      ("tp", "fsdp"), cfg.qkv_bias)
+    p["wv"], s["wv"] = sp_linear_init(ks[2], d, kv * hd, sp, dtype,
+                                      ("tp", "fsdp"), cfg.qkv_bias)
+    p["wo"], s["wo"] = sp_linear_init(ks[3], h * hd, d, sp, dtype,
+                                      ("fsdp", "tp"))
+    return p, s
+
+
+def gqa_cache_init(cfg: ArchConfig, batch: int, max_len: int, dtype,
+                   window: Optional[int] = None):
+    """KV cache.  Windowed layers get a ring buffer of length window —
+    at 500k context a 4k-window cache is 128x smaller (see DESIGN.md)."""
+    length = min(max_len, window) if window else max_len
+    kv, hd = cfg.n_kv, cfg.hd()
+    z = jnp.zeros((batch, length, kv, hd), dtype)
+    # seq over model = context-parallel decode: always divisible (32k/16),
+    # and the only way a 1.5TB 88-layer 32k cache fits per device when the
+    # kv-head count (8) doesn't divide the tp axis.
+    spec = ("act_batch", "act_seq_sp", "act_heads", None)
+    return ({"k": z, "v": z}, {"k": spec, "v": spec})
+
+
+def gqa_apply(p: Params, x: jax.Array, cfg: ArchConfig, *,
+              positions: jax.Array, window: Optional[int] = None,
+              cache: Optional[Params] = None,
+              cache_pos: Optional[jax.Array] = None,
+              return_kv: bool = False):
+    """x [B, S, d].  Training/prefill when cache is None (or return_kv),
+    single-token decode when cache is given (x [B, 1, d], cache_pos scalar)."""
+    b, s, d = x.shape
+    h, kv, hd = cfg.n_heads, cfg.n_kv, cfg.hd()
+    sp = cfg.sparsity
+
+    q = sp_linear_apply(p["wq"], x, sp).reshape(b, s, h, hd)
+    k = sp_linear_apply(p["wk"], x, sp).reshape(b, s, kv, hd)
+    v = sp_linear_apply(p["wv"], x, sp).reshape(b, s, kv, hd)
+    q = constrain(q, "act_batch", "act_seq", "act_heads", None)
+
+    cos, sin = rope_angles(positions, hd, cfg.rope_theta)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+
+    if cache is None:
+        # expand KV heads so the head axis shards evenly under TP (the
+        # broadcast fuses into the attention einsum; HBM caches stay grouped)
+        g = h // kv
+        ke = constrain(jnp.repeat(k, g, axis=2),
+                       "act_batch", "act_seq", "act_heads", None)
+        ve = constrain(jnp.repeat(v, g, axis=2),
+                       "act_batch", "act_seq", "act_heads", None)
+        o = chunked_attention(q, ke, ve, causal=True, window=window,
+                              cap=cfg.softcap_attn,
+                              q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk,
+                              chain_bf16=cfg.attn_chain_bf16)
+        new_kv = {"k": k, "v": v} if return_kv else None
+    else:
+        # decode: ring-buffer insertion.  Slot j of a length-L cache holds
+        # absolute position p = pos - ((pos - j) mod L); p < 0 marks an
+        # unfilled slot.  For L == max_len this reduces to the plain
+        # append-at-pos cache, so one code path serves both.
+        length = cache["k"].shape[1]
+        slot = cache_pos % length
+        ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype),
+                                          (0, slot, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype),
+                                          (0, slot, 0, 0))
+        new_kv = {"k": ck, "v": cv}
+        g = h // kv
+        qg = q.reshape(b, kv, g, hd)
+        sc = jnp.einsum("bhgd,blhd->bhgl", qg.astype(jnp.float32),
+                        ck.astype(jnp.float32)) * hd ** -0.5
+        sc = softcap(sc, cfg.softcap_attn)
+        idx = jnp.arange(length)
+        abs_pos = cache_pos - jnp.mod(cache_pos - idx, length)
+        valid = abs_pos >= 0
+        if window is not None:
+            valid &= abs_pos > cache_pos - window
+        sc = jnp.where(valid[None, None, None, :], sc, _NEG)
+        pr = jax.nn.softmax(sc, axis=-1)
+        o = jnp.einsum("bhgl,blhd->bhgd", pr, cv.astype(jnp.float32))
+        o = o.reshape(b, 1, h, hd).astype(x.dtype)
+
+    y = sp_linear_apply(p["wo"], o.reshape(b, s, h * hd), sp)
+    return constrain(y, "act_batch", "act_seq", None), new_kv
+
+
+# ------------------------------------------------------------------------ MLA
+
+def mla_init(key, cfg: ArchConfig, dtype):
+    d, h = cfg.d_model, cfg.n_heads
+    qk = cfg.qk_nope_dim + cfg.qk_rope_dim
+    ks = jax.random.split(key, 5)
+    sp = cfg.sparsity
+    p, s = {}, {}
+    p["wq"], s["wq"] = sp_linear_init(ks[0], d, h * qk, sp, dtype, ("tp", "fsdp"))
+    p["wdkv"], s["wdkv"] = sp_linear_init(
+        ks[1], d, cfg.kv_lora + cfg.qk_rope_dim, sp, dtype, (None, "fsdp"))
+    p["wuk"], s["wuk"] = sp_linear_init(
+        ks[2], cfg.kv_lora, h * cfg.qk_nope_dim, sp, dtype, ("tp", "fsdp"))
+    p["wuv"], s["wuv"] = sp_linear_init(
+        ks[3], cfg.kv_lora, h * cfg.v_head_dim, sp, dtype, ("tp", "fsdp"))
+    p["wo"], s["wo"] = sp_linear_init(
+        ks[4], h * cfg.v_head_dim, d, sp, dtype, ("fsdp", "tp"))
+    return p, s
+
+
+def mla_cache_init(cfg: ArchConfig, batch: int, max_len: int, dtype):
+    ckv = jnp.zeros((batch, max_len, cfg.kv_lora), dtype)
+    kpe = jnp.zeros((batch, max_len, cfg.qk_rope_dim), dtype)
+    return ({"ckv": ckv, "kpe": kpe},
+            {"ckv": ("act_batch", "act_seq_sp", None),
+             "kpe": ("act_batch", "act_seq_sp", None)})
+
+
+def _mla_qkv(p, x, cfg, positions):
+    b, s, _ = x.shape
+    h = cfg.n_heads
+    nd, rd = cfg.qk_nope_dim, cfg.qk_rope_dim
+    sp = cfg.sparsity
+    q = sp_linear_apply(p["wq"], x, sp).reshape(b, s, h, nd + rd)
+    qn, qpe = q[..., :nd], q[..., nd:]
+    dkv = sp_linear_apply(p["wdkv"], x, sp)
+    ckv, kpe = dkv[..., :cfg.kv_lora], dkv[..., cfg.kv_lora:]
+    cos, sin = rope_angles(positions, rd, cfg.rope_theta)
+    qpe = apply_rope(qpe, cos, sin)
+    kpe = apply_rope(kpe[..., None, :], cos, sin)[..., 0, :]   # single kv head
+    return qn, qpe, ckv, kpe
+
+
+def mla_apply(p: Params, x: jax.Array, cfg: ArchConfig, *,
+              positions: jax.Array, cache: Optional[Params] = None,
+              cache_pos: Optional[jax.Array] = None,
+              return_kv: bool = False):
+    b, s, d = x.shape
+    h, nd, rd, vd = cfg.n_heads, cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    sp = cfg.sparsity
+    qn, qpe, ckv, kpe = _mla_qkv(p, x, cfg, positions)
+    scale = (nd + rd) ** -0.5
+
+    if cache is None:
+        # up-project and run standard chunked attention (prefill/train)
+        kn = sp_linear_apply(p["wuk"], ckv, sp).reshape(b, s, h, nd)
+        vv = sp_linear_apply(p["wuv"], ckv, sp).reshape(b, s, h, vd)
+        q = jnp.concatenate([qn, qpe], axis=-1)
+        k = jnp.concatenate([kn, jnp.broadcast_to(kpe[:, :, None, :],
+                                                  (b, s, h, rd))], axis=-1)
+        o = chunked_attention(q, k, vv, causal=True, scale=scale,
+                              q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk,
+                              chain_bf16=cfg.attn_chain_bf16)
+        new_kv = {"ckv": ckv, "kpe": kpe} if return_kv else None
+    else:
+        # absorbed decode: scores/outputs computed in the latent space —
+        # the cache stays [kv_lora + rope] per token (MLA's memory win).
+        cc = jax.lax.dynamic_update_slice(
+            cache["ckv"], ckv.astype(cache["ckv"].dtype), (0, cache_pos, 0))
+        cp = jax.lax.dynamic_update_slice(
+            cache["kpe"], kpe.astype(cache["kpe"].dtype), (0, cache_pos, 0))
+        new_kv = {"ckv": cc, "kpe": cp}
+        # materialize per-head up-proj weights (dense view for the einsum)
+        wuk_dense = _dense_weight(p["wuk"], cfg)        # [h*nd, kv_lora]
+        wuv_dense = _dense_weight(p["wuv"], cfg)        # [h*vd, kv_lora]
+        wuk3 = wuk_dense.reshape(h, nd, cfg.kv_lora)
+        wuv3 = wuv_dense.reshape(h, vd, cfg.kv_lora)
+        qlat = jnp.einsum("bhd,hdr->bhr", qn[:, 0].astype(jnp.float32),
+                          wuk3.astype(jnp.float32))
+        sc = jnp.einsum("bhr,blr->bhl", qlat, cc.astype(jnp.float32))
+        sc += jnp.einsum("bhd,bld->bhl", qpe[:, 0].astype(jnp.float32),
+                         cp.astype(jnp.float32))
+        sc *= scale
+        idx = jnp.arange(cc.shape[1])
+        sc = jnp.where((idx <= cache_pos)[None, None, :], sc, _NEG)
+        pr = jax.nn.softmax(sc, axis=-1)
+        ov = jnp.einsum("bhl,blr->bhr", pr, cc.astype(jnp.float32))
+        o = jnp.einsum("bhr,hdr->bhd", ov, wuv3.astype(jnp.float32))
+        o = o.reshape(b, 1, h, vd).astype(x.dtype)
+
+    y = sp_linear_apply(p["wo"], o.reshape(b, s, h * vd), sp)
+    return constrain(y, "act_batch", "act_seq", None), new_kv
+
+
+def _dense_weight(lin_params: Params, cfg: ArchConfig) -> jax.Array:
+    """Dense view of a (possibly compressed/masked/srste) linear weight,
+    consistent with what sp_linear_apply multiplies by."""
+    spc = cfg.sparsity
+    if "w_vals" in lin_params:
+        from repro.core.sparse_matmul import _decompress_xla
+        o, nnz = lin_params["w_vals"].shape
+        k = nnz * spc.m // spc.n
+        return _decompress_xla(lin_params["w_vals"], lin_params["w_idx"],
+                               spc.n, spc.m, k)
+    w = lin_params["w"]
+    if "mask" in lin_params:
+        w = w * lin_params["mask"].astype(w.dtype)
+    elif spc.mode == "srste" and spc.applies(w.shape[1], w.shape[0]):
+        from repro.core.sparse_matmul import ste_sparsify
+        w = ste_sparsify(w, spc.n, spc.m, spc.srste_lam)
+    return w
+
+
+# -------------------------------------------------------------- cross-attention
+
+def cross_attn_init(key, cfg: ArchConfig, dtype):
+    return gqa_init(key, cfg, dtype)
+
+
+def cross_attn_apply(p: Params, x: jax.Array, enc_kv: Tuple[jax.Array, jax.Array],
+                     cfg: ArchConfig) -> jax.Array:
+    """Decoder cross-attention over precomputed encoder K/V [B, Se, KV, hd]."""
+    b, s, d = x.shape
+    h, kv, hd = cfg.n_heads, cfg.n_kv, cfg.hd()
+    sp = cfg.sparsity
+    q = sp_linear_apply(p["wq"], x, sp).reshape(b, s, h, hd)
+    k, v = enc_kv
+    o = chunked_attention(q, k, v, causal=False, q_chunk=cfg.q_chunk,
+                          kv_chunk=cfg.kv_chunk,
+                          chain_bf16=cfg.attn_chain_bf16)
+    y = sp_linear_apply(p["wo"], o.reshape(b, s, h * hd), sp)
+    return constrain(y, "act_batch", "act_seq", None)
+
+
+def cross_kv(p: Params, enc_out: jax.Array, cfg: ArchConfig):
+    """Precompute cross-attention K/V from encoder output (once per request)."""
+    b, se, _ = enc_out.shape
+    kv, hd = cfg.n_kv, cfg.hd()
+    sp = cfg.sparsity
+    k = sp_linear_apply(p["wk"], enc_out, sp).reshape(b, se, kv, hd)
+    v = sp_linear_apply(p["wv"], enc_out, sp).reshape(b, se, kv, hd)
+    return k, v

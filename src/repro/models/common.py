@@ -1,0 +1,142 @@
+"""Common model building blocks (functional; every init returns (params, specs)).
+
+Sharding specs are tuples of logical axis names resolved by dist.api.
+Weight convention follows core.layers: linear weights are [out, in] and the
+contraction axis (in) is the N:M-sparse axis.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.layers import linear_apply, linear_init
+from repro.core.sparse_matmul import SparsityConfig
+from repro.dist.api import constrain
+
+Params = Dict[str, Any]
+
+
+# --------------------------------------------------------------------- linear
+
+def sp_linear_init(key, in_dim: int, out_dim: int, cfg: SparsityConfig,
+                   dtype=jnp.bfloat16, spec: Tuple = ("tp", "fsdp"),
+                   use_bias: bool = False, scale: Optional[float] = None):
+    p = linear_init(key, in_dim, out_dim, cfg, dtype, use_bias, scale)
+    s: Params = {}
+    for k in p:
+        if k == "b":
+            s[k] = (spec[0],)
+        else:                       # w | mask | w_vals | w_idx — all [out, in*]
+            s[k] = spec
+    return p, s
+
+
+def sp_linear_apply(p: Params, x: jax.Array, cfg: SparsityConfig) -> jax.Array:
+    return linear_apply(p, x, cfg)
+
+
+# ---------------------------------------------------------------------- norms
+
+def rms_norm_init(d: int, dtype=jnp.float32):
+    return {"scale": jnp.ones((d,), dtype)}, {"scale": (None,)}
+
+
+def rms_norm(p: Params, x: jax.Array, eps: float = 1e-5,
+             zero_centered: bool = False) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    scale = p["scale"].astype(jnp.float32)
+    if zero_centered:               # gemma-style (1 + scale)
+        scale = 1.0 + scale
+    return (y * scale).astype(x.dtype)
+
+
+def layer_norm_init(d: int, dtype=jnp.float32):
+    return ({"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)},
+            {"scale": (None,), "bias": (None,)})
+
+
+def layer_norm(p: Params, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"] + p["bias"]).astype(x.dtype)
+
+
+# ------------------------------------------------------------------ embedding
+
+def embed_init(key, vocab: int, d: int, dtype=jnp.bfloat16):
+    # vocab over tp only: the token gather then needs no cross-(data)-axis
+    # resharding (SPMD handles vocab-sharded gather with a masked psum), and
+    # the lm-head contraction reads the same layout.
+    emb = (jax.random.normal(key, (vocab, d), jnp.float32) * d ** -0.5).astype(dtype)
+    return {"emb": emb}, {"emb": ("tp", None)}
+
+
+def embed_apply(p: Params, tokens: jax.Array) -> jax.Array:
+    y = jnp.take(p["emb"], tokens, axis=0)
+    return constrain(y, "act_batch", "act_seq", None)
+
+
+def lm_head_apply(p: Params, x: jax.Array,
+                  softcap: Optional[float] = None) -> jax.Array:
+    """logits = x @ emb.T, vocab axis model-sharded."""
+    logits = jnp.einsum("...d,vd->...v", x, p["emb"],
+                        preferred_element_type=jnp.float32)
+    if softcap is not None:
+        logits = softcap * jnp.tanh(logits / softcap)
+    return constrain(logits, "act_batch", "act_seq", "act_vocab")
+
+
+# ----------------------------------------------------------------------- rope
+
+def rope_angles(positions: jax.Array, dim: int, theta: float) -> Tuple[jax.Array, jax.Array]:
+    """positions [...] -> (cos, sin) [..., dim/2] in f32."""
+    inv = 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+    ang = positions.astype(jnp.float32)[..., None] * inv
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x [..., S, H, D]; cos/sin [..., S, D/2] (broadcast over heads)."""
+    d2 = x.shape[-1] // 2
+    x1, x2 = x[..., :d2], x[..., d2:]
+    c = cos[..., None, :]
+    s = sin[..., None, :]
+    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s],
+                           axis=-1).astype(x.dtype)
+
+
+def softcap(x: jax.Array, cap: Optional[float]) -> jax.Array:
+    if cap is None:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+ACTIVATIONS = {
+    "silu": jax.nn.silu,
+    "gelu": jax.nn.gelu,
+}
+
+
+# ------------------------------------------------------------ losses / sampling
+
+def cross_entropy(logits: jax.Array, labels: jax.Array,
+                  ignore_id: int = -1) -> jax.Array:
+    """Mean token NLL in f32; labels == ignore_id are masked out."""
+    lse = jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)
+    gold = jnp.take_along_axis(
+        logits.astype(jnp.float32),
+        jnp.maximum(labels, 0)[..., None], axis=-1)[..., 0]
+    nll = lse - gold
+    mask = (labels != ignore_id).astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def greedy_sample(logits: jax.Array) -> jax.Array:
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32)

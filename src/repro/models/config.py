@@ -1,0 +1,195 @@
+"""Architecture configuration schema.
+
+One ArchConfig fully describes a model: family topology, attention flavor,
+MoE/SSM parameters, sparsity policy, and the compile-shaping knobs (chunk
+sizes, remat).  configs/<id>.py instantiate these with the exact assigned
+values; ``reduced()`` derives the CPU smoke-test variant.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+
+from repro.core.sparse_matmul import SparsityConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str                      # dense | moe | ssm | hybrid | vlm | audio
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv: int
+    d_ff: int
+    vocab: int
+    head_dim: Optional[int] = None   # default d_model // n_heads
+    rope_theta: float = 10000.0
+    qkv_bias: bool = False
+    tie_embeddings: bool = False
+    norm_eps: float = 1e-5
+    act: str = "silu"                # silu | gelu
+    # --- attention extras ---
+    window: Optional[int] = None             # sliding window (local layers)
+    local_global_period: Optional[int] = None  # gemma2: alternate local/global
+    softcap_attn: Optional[float] = None
+    softcap_final: Optional[float] = None
+    scale_embeds: bool = False               # gemma: x *= sqrt(d)
+    post_norms: bool = False                 # gemma2: post-sublayer norms
+    gemma_norm: bool = False                 # zero-centered RMSNorm scale
+    mla: bool = False
+    kv_lora: int = 512
+    qk_nope_dim: int = 128
+    qk_rope_dim: int = 64
+    v_head_dim: int = 128
+    # --- MoE ---
+    n_experts: int = 0
+    top_k: int = 0
+    n_shared_experts: int = 0
+    moe_dff: Optional[int] = None            # expert hidden (ds-v2: 1408)
+    dense_residual: bool = False             # arctic: dense MLP in parallel
+    first_dense_layers: int = 0              # ds-v2: layer 0 dense
+    capacity_factor: float = 1.25
+    # --- SSM ---
+    ssm_state: int = 0
+    d_inner: Optional[int] = None            # default 2*d_model
+    conv_kernel: int = 4
+    dt_rank: Optional[int] = None            # mamba1; default ceil(d/16)
+    mamba_version: int = 1
+    ssm_heads: Optional[int] = None          # mamba2
+    attn_period: int = 0                     # zamba2: shared attn every k blocks
+    # --- enc-dec (whisper) ---
+    enc_layers: int = 0
+    enc_seq: int = 1500
+    n_mels: int = 80
+    # --- input mode ---
+    input_mode: str = "tokens"               # tokens | embeds (vlm/audio stubs)
+    # --- sparsity (the paper's technique) ---
+    sparsity: SparsityConfig = dataclasses.field(default_factory=SparsityConfig)
+    # --- numerics / compile shaping ---
+    dtype: str = "bfloat16"
+    q_chunk: int = 512
+    kv_chunk: int = 1024
+    ssm_chunk: int = 64
+    remat: bool = True
+    # sqrt-remat: scan over G groups of L/G layers with an outer checkpoint —
+    # stores G + L/G layer boundaries instead of L (0 = plain per-layer remat)
+    remat_group: int = 0
+    grad_accum: int = 1      # microbatching for the train_4k shape
+    # §Perf knob: keep the attention score/probability chain in bf16 (halves
+    # the dominant HBM stream of the pure-JAX attention); stats stay f32.
+    attn_chain_bf16: bool = False
+    # parallel layout policies (§Perf-confirmed):
+    #   serve_layout: '2d' (weights tp x fsdp) | 'tp' (replicate over data —
+    #     zero weight collectives per token; for models whose compressed
+    #     weights fit per tp shard, i.e. everything below ~20B)
+    #   train_layout: '2d' | 'fulldp' (replicate weights, batch over the
+    #     whole mesh — the right shape for sub-1B models like whisper)
+    serve_layout: str = "2d"
+    train_layout: str = "2d"
+
+    def hd(self) -> int:
+        if self.head_dim:
+            return self.head_dim
+        return self.d_model // self.n_heads if self.n_heads else 0
+
+    def dinner(self) -> int:
+        return self.d_inner or 2 * self.d_model
+
+    def dtrank(self) -> int:
+        return self.dt_rank or -(-self.d_model // 16)
+
+    def jdtype(self):
+        return jnp.bfloat16 if self.dtype == "bfloat16" else jnp.float32
+
+    def replace(self, **kw) -> "ArchConfig":
+        return dataclasses.replace(self, **kw)
+
+    def reduced(self) -> "ArchConfig":
+        """Tiny same-family variant for CPU smoke tests."""
+        kw = dict(
+            n_layers=min(self.n_layers, 4),
+            d_model=256,
+            n_heads=4,
+            n_kv=min(self.n_kv, 4) if self.n_kv else 0,
+            d_ff=512,
+            vocab=512,
+            head_dim=64,
+            dtype="float32",
+            q_chunk=64, kv_chunk=64, ssm_chunk=16,
+            sparsity=dataclasses.replace(self.sparsity, min_dim=64),
+        )
+        if self.n_experts:
+            kw.update(n_experts=8, top_k=min(self.top_k, 2),
+                      moe_dff=128 if self.moe_dff else None,
+                      first_dense_layers=min(self.first_dense_layers, 1))
+        if self.ssm_state:
+            kw.update(ssm_state=8, d_inner=512,
+                      ssm_heads=8 if self.ssm_heads else None,
+                      dt_rank=16 if self.mamba_version == 1 else None,
+                      attn_period=2 if self.attn_period else 0)
+        if self.mla:
+            kw.update(kv_lora=64, qk_nope_dim=32, qk_rope_dim=16, v_head_dim=32)
+        if self.enc_layers:
+            kw.update(enc_layers=2, enc_seq=64)
+        if self.window:
+            kw.update(window=32)
+        if self.local_global_period:
+            kw.update(local_global_period=2)
+        return dataclasses.replace(self, **kw)
+
+
+# Parameter counting (used for MODEL_FLOPS = 6*N*D and memory estimates).
+def param_count(cfg: ArchConfig, active_only: bool = False) -> int:
+    d, dff, L = cfg.d_model, cfg.d_ff, cfg.n_layers
+    hd, H, KV = cfg.hd(), cfg.n_heads, cfg.n_kv
+    total = cfg.vocab * d * (1 if cfg.tie_embeddings else 2)
+
+    def attn_params() -> int:
+        if cfg.mla:
+            qk = cfg.qk_nope_dim + cfg.qk_rope_dim
+            return (d * H * qk                       # wq
+                    + d * (cfg.kv_lora + cfg.qk_rope_dim)
+                    + cfg.kv_lora * H * (cfg.qk_nope_dim + cfg.v_head_dim)
+                    + H * cfg.v_head_dim * d)
+        return d * hd * (H + 2 * KV) + H * hd * d
+
+    def mlp_params(hidden: int) -> int:
+        return 3 * d * hidden if cfg.act == "silu" else 2 * d * hidden
+
+    if cfg.family in ("dense", "vlm"):
+        total += L * (attn_params() + mlp_params(dff))
+    elif cfg.family == "moe":
+        moe_dff = cfg.moe_dff or dff
+        e_count = (cfg.top_k + cfg.n_shared_experts) if active_only else \
+                  (cfg.n_experts + cfg.n_shared_experts)
+        per_layer = attn_params() + e_count * mlp_params(moe_dff) \
+            + d * cfg.n_experts  # router
+        if cfg.dense_residual:
+            per_layer += mlp_params(dff)
+        dense_layers = cfg.first_dense_layers
+        total += dense_layers * (attn_params() + mlp_params(dff))
+        total += (L - dense_layers) * per_layer
+    elif cfg.family == "ssm":
+        di, st = cfg.dinner(), cfg.ssm_state
+        per = (d * 2 * di + di * cfg.conv_kernel
+               + di * (cfg.dtrank() + 2 * st) + cfg.dtrank() * di
+               + di * st + di + di * d)
+        total += L * per
+    elif cfg.family == "hybrid":
+        di, st = cfg.dinner(), cfg.ssm_state
+        nheads = cfg.ssm_heads or di // 64
+        # mamba2 block: packed in_proj (x, z, B, C, dt) + conv + out_proj
+        per = (d * (2 * di + 2 * st + nheads) + di * cfg.conv_kernel
+               + 3 * nheads + di + di * d)
+        total += L * per
+        if cfg.attn_period:
+            total += attn_params() + mlp_params(dff)  # shared block (once)
+    elif cfg.family == "audio":
+        total += (cfg.enc_layers + L) * (attn_params() + mlp_params(dff))
+        total += L * attn_params()          # cross-attention
+        total += cfg.n_mels * d * 3 * 2     # conv frontend stub
+    return int(total)

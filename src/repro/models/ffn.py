@@ -1,0 +1,171 @@
+"""FFN layers: gated MLP and Mixture-of-Experts.
+
+MoE uses a *sort-based* capacity dispatch (Megablocks/MaxText "dropping"
+style): assignments are sorted by expert id, positions past the per-expert
+capacity are dropped, and both dispatch and combine are row gathers — no
+[T, E, C] one-hot dispatch einsum, so the compiled HLO contains no fake
+matmul FLOPs (keeps MODEL_FLOPS / HLO_FLOPs honest, see DESIGN.md §3).
+
+Expert weights are stacked [E, out, in] and N:M-sparse along `in`, exactly
+like every other projection (the paper's technique applied per expert —
+expert weights dominate the HBM bytes of MoE archs, so this is where the
+compressed format's memory win is largest).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.sparse_matmul import SparsityConfig, ste_sparsify, _decompress_xla
+from repro.dist.api import constrain
+from repro.models.common import ACTIVATIONS, Params, sp_linear_apply, sp_linear_init
+from repro.models.config import ArchConfig
+
+
+# ------------------------------------------------------------------ gated MLP
+
+def mlp_init(key, cfg: ArchConfig, dtype, d_ff: Optional[int] = None):
+    d = cfg.d_model
+    dff = d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    sp = cfg.sparsity
+    p, s = {}, {}
+    p["wg"], s["wg"] = sp_linear_init(ks[0], d, dff, sp, dtype, ("tp", "fsdp"))
+    p["wu"], s["wu"] = sp_linear_init(ks[1], d, dff, sp, dtype, ("tp", "fsdp"))
+    p["wd"], s["wd"] = sp_linear_init(ks[2], dff, d, sp, dtype, ("fsdp", "tp"))
+    return p, s
+
+
+def mlp_apply(p: Params, x: jax.Array, cfg: ArchConfig) -> jax.Array:
+    sp = cfg.sparsity
+    act = ACTIVATIONS[cfg.act]
+    h = act(sp_linear_apply(p["wg"], x, sp)) * sp_linear_apply(p["wu"], x, sp)
+    h = constrain(h, "act_batch", "act_seq", "act_heads")
+    y = sp_linear_apply(p["wd"], h, sp)
+    return constrain(y, "act_batch", "act_seq", None)
+
+
+# ------------------------------------------------------------------------ MoE
+
+def _stacked_sparse_init(key, e: int, out_dim: int, in_dim: int,
+                         sp: SparsityConfig, dtype, spec):
+    """Stacked expert weight [E, out, in], sparse along in."""
+    w = (jax.random.normal(key, (e, out_dim, in_dim), jnp.float32)
+         * in_dim ** -0.5).astype(dtype)
+    if sp.applies(in_dim, out_dim) and sp.mode == "compressed":
+        from repro.core.sparsity import compress
+        spx = compress(w, sp.n, sp.m)
+        return ({"w_vals": spx.values, "w_idx": spx.indices},
+                {"w_vals": spec, "w_idx": spec})
+    return {"w": w}, {"w": spec}
+
+
+def _stacked_dense_view(p: Params, sp: SparsityConfig, in_dim: int) -> jax.Array:
+    """Dense view [E, out, in] of stacked expert weights under any mode."""
+    if "w_vals" in p:
+        vals, idx = p["w_vals"], p["w_idx"]
+        dec = jax.vmap(lambda v, i: _decompress_xla(v, i, sp.n, sp.m, in_dim))
+        return dec(vals, idx)
+    w = p["w"]
+    if sp.applies(in_dim, w.shape[1]) and sp.mode in ("srste", "fixed"):
+        if sp.mode == "srste":
+            return ste_sparsify(w, sp.n, sp.m, sp.srste_lam)
+        return w * p["mask"].astype(w.dtype)
+    return w
+
+
+def moe_init(key, cfg: ArchConfig, dtype):
+    e, d = cfg.n_experts, cfg.d_model
+    dff = cfg.moe_dff or cfg.d_ff
+    ks = jax.random.split(key, 5)
+    sp = cfg.sparsity
+    p, s = {}, {}
+    router = (jax.random.normal(ks[0], (e, d), jnp.float32) * d ** -0.5)
+    p["router"] = {"w": router.astype(jnp.float32)}   # routing in f32
+    s["router"] = {"w": (None, "fsdp")}
+    espec = ("ep", None, "fsdp")
+    p["wg"], s["wg"] = _stacked_sparse_init(ks[1], e, dff, d, sp, dtype, espec)
+    p["wu"], s["wu"] = _stacked_sparse_init(ks[2], e, dff, d, sp, dtype, espec)
+    p["wd"], s["wd"] = _stacked_sparse_init(ks[3], e, d, dff, sp, dtype,
+                                            ("ep", None, "fsdp"))
+    if cfg.n_shared_experts:
+        p["shared"], s["shared"] = mlp_init(
+            ks[4], cfg, dtype, d_ff=cfg.n_shared_experts * dff)
+    return p, s
+
+
+def _capacity(tokens: int, e: int, k: int, cf: float) -> int:
+    c = int(-(-tokens * k * cf // e))
+    return max(8, -(-c // 8) * 8)  # multiple of 8
+
+
+def moe_apply(p: Params, x: jax.Array, cfg: ArchConfig
+              ) -> Tuple[jax.Array, jax.Array]:
+    """Returns (y, aux_load_balance_loss)."""
+    b, sq, d = x.shape
+    t = b * sq
+    e, k = cfg.n_experts, cfg.top_k
+    dff = cfg.moe_dff or cfg.d_ff
+    sp = cfg.sparsity
+    act = ACTIVATIONS[cfg.act]
+    cap = _capacity(t, e, k, cfg.capacity_factor)
+
+    xt = x.reshape(t, d)
+    logits = jnp.einsum("td,ed->te", xt.astype(jnp.float32), p["router"]["w"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, ids = jax.lax.top_k(probs, k)                      # [t, k]
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+
+    # ---- sort-based dispatch -------------------------------------------
+    ids_f = ids.reshape(-1)                                  # [t*k]
+    tok_f = jnp.repeat(jnp.arange(t, dtype=jnp.int32), k)
+    orig = jnp.arange(t * k, dtype=jnp.int32)
+    s_eid, s_tok, s_orig = jax.lax.sort(
+        (ids_f.astype(jnp.int32), tok_f, orig), num_keys=1, is_stable=True)
+    counts = jnp.bincount(ids_f, length=e)                   # [e]
+    starts = jnp.cumsum(counts) - counts
+    pos = jnp.arange(t * k, dtype=jnp.int32) - starts[s_eid].astype(jnp.int32)
+    keep = pos < cap
+    slot = jnp.where(keep, s_eid * cap + pos, e * cap)       # sentinel = e*cap
+
+    # slot -> token row (sentinel token row t = zeros)
+    slot_tok = jnp.full((e * cap + 1,), t, jnp.int32).at[slot].set(
+        jnp.where(keep, s_tok, t), mode="drop")
+    xt_pad = jnp.concatenate([xt, jnp.zeros((1, d), xt.dtype)], axis=0)
+    xbuf = jnp.take(xt_pad, slot_tok[:-1], axis=0).reshape(e, cap, d)
+    xbuf = constrain(xbuf, "act_ep", None, None)
+
+    # ---- expert FFN (stacked einsums; weights N:M sparse along `in`) ----
+    wg = _stacked_dense_view(p["wg"], sp, d)
+    wu = _stacked_dense_view(p["wu"], sp, d)
+    wd = _stacked_dense_view(p["wd"], sp, dff)
+    h = act(jnp.einsum("ecd,efd->ecf", xbuf, wg,
+                       preferred_element_type=jnp.float32).astype(x.dtype))
+    h = h * jnp.einsum("ecd,efd->ecf", xbuf, wu,
+                       preferred_element_type=jnp.float32).astype(x.dtype)
+    ybuf = jnp.einsum("ecf,edf->ecd", h, wd,
+                      preferred_element_type=jnp.float32).astype(x.dtype)
+    ybuf = constrain(ybuf, "act_ep", None, None)
+    ybuf_pad = jnp.concatenate(
+        [ybuf.reshape(e * cap, d), jnp.zeros((1, d), x.dtype)], axis=0)
+
+    # ---- gather-based combine (unsort; dropped -> sentinel zero row) ----
+    inv = jnp.zeros((t * k,), jnp.int32).at[s_orig].set(
+        jnp.where(keep, slot, e * cap).astype(jnp.int32))
+    y_assign = jnp.take(ybuf_pad, inv, axis=0).reshape(t, k, d)
+    y = jnp.einsum("tkd,tk->td", y_assign.astype(jnp.float32),
+                   gate.astype(jnp.float32)).astype(x.dtype)
+    y = y.reshape(b, sq, d)
+    y = constrain(y, "act_batch", "act_seq", None)
+
+    if cfg.n_shared_experts:
+        y = y + mlp_apply(p["shared"], x, cfg)
+
+    # GShard/Switch load-balance aux: E * sum_e f_e * P_e
+    f = counts.astype(jnp.float32) / jnp.maximum(t * k, 1)
+    pmean = probs.mean(axis=0)
+    aux = e * jnp.sum(f * pmean)
+    return y, aux

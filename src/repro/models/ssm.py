@@ -1,0 +1,290 @@
+"""State-space models: Mamba1 (falcon-mamba) and Mamba2/SSD (zamba2).
+
+Training/prefill uses chunked scans: the sequence is split into ssm_chunk
+pieces; within a chunk Mamba1 runs an associative first-order recurrence scan
+and Mamba2 uses the SSD (intra-chunk quadratic + inter-chunk state passing)
+formulation.  Decode is the O(1) recurrence update — these are the archs that
+run the long_500k shape.
+
+All projections (in/x/dt/out) are SparseLinear (paper technique); the
+recurrence itself is not a GEMM and is left dense (DESIGN.md §Arch-
+applicability).  SSM math runs in f32 for stability.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.api import constrain
+from repro.models.common import Params, rms_norm, rms_norm_init, sp_linear_apply, \
+    sp_linear_init
+from repro.models.config import ArchConfig
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array,
+                 state: Optional[jax.Array] = None):
+    """Depthwise causal conv over seq.  x [B, S, C], w [C, K], b [C].
+    If state [B, K-1, C] is given (decode, S==1), uses and updates it."""
+    k = w.shape[1]
+    if state is not None:
+        buf = jnp.concatenate([state, x], axis=1)          # [B, K, C]
+        y = jnp.einsum("bkc,ck->bc", buf.astype(jnp.float32),
+                       w.astype(jnp.float32)) + b
+        return y[:, None, :].astype(x.dtype), buf[:, 1:, :]
+    s = x.shape[1]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    y = sum(xp[:, i:i + s, :].astype(jnp.float32) * w[:, i].astype(jnp.float32)
+            for i in range(k))
+    return (y + b).astype(x.dtype), None
+
+
+# --------------------------------------------------------------------- Mamba1
+
+def mamba1_init(key, cfg: ArchConfig, dtype):
+    d, di, st, dtr, ck = (cfg.d_model, cfg.dinner(), cfg.ssm_state,
+                          cfg.dtrank(), cfg.conv_kernel)
+    ks = jax.random.split(key, 6)
+    sp = cfg.sparsity
+    p, s = {}, {}
+    p["in_proj"], s["in_proj"] = sp_linear_init(ks[0], d, 2 * di, sp, dtype,
+                                                ("tp", "fsdp"))
+    p["conv_w"] = (jax.random.normal(ks[1], (di, ck), jnp.float32) * 0.1)
+    p["conv_b"] = jnp.zeros((di,), jnp.float32)
+    s["conv_w"], s["conv_b"] = ("tp", None), ("tp",)
+    p["x_proj"], s["x_proj"] = sp_linear_init(ks[2], di, dtr + 2 * st, sp,
+                                              dtype, (None, "tp"))
+    p["dt_proj"], s["dt_proj"] = sp_linear_init(ks[3], dtr, di, sp, dtype,
+                                                ("tp", None), use_bias=True)
+    a = jnp.tile(jnp.arange(1, st + 1, dtype=jnp.float32)[None, :], (di, 1))
+    p["A_log"] = jnp.log(a)
+    p["D"] = jnp.ones((di,), jnp.float32)
+    s["A_log"], s["D"] = ("tp", None), ("tp",)
+    p["out_proj"], s["out_proj"] = sp_linear_init(ks[4], di, d, sp, dtype,
+                                                  ("fsdp", "tp"))
+    return p, s
+
+
+def mamba1_cache_init(cfg: ArchConfig, batch: int, dtype):
+    di, st, ck = cfg.dinner(), cfg.ssm_state, cfg.conv_kernel
+    return ({"h": jnp.zeros((batch, di, st), jnp.float32),
+             "conv": jnp.zeros((batch, ck - 1, di), dtype)},
+            {"h": ("act_batch", "act_heads", None),
+             "conv": ("act_batch", None, "act_heads")})
+
+
+def _mamba1_core(dt, bmat, cmat, xs, a, h0, chunk: int):
+    """Selective scan.  dt/xs [B,S,di] f32, bmat/cmat [B,S,st] f32,
+    a [di,st] f32 (negative), h0 [B,di,st].  Returns (y [B,S,di], h_last)."""
+    bb, s, di = xs.shape
+    st = bmat.shape[-1]
+    nc = s // chunk
+
+    dt_c = dt.reshape(bb, nc, chunk, di).transpose(1, 0, 2, 3)
+    x_c = xs.reshape(bb, nc, chunk, di).transpose(1, 0, 2, 3)
+    b_c = bmat.reshape(bb, nc, chunk, st).transpose(1, 0, 2, 3)
+    c_c = cmat.reshape(bb, nc, chunk, st).transpose(1, 0, 2, 3)
+
+    def chunk_step(h, args):
+        dtk, xk, bk, ck = args                              # [B, c, ...]
+        ldA = dtk[..., None] * a[None, None]                # [B, c, di, st]
+        dbx = (dtk * xk)[..., None] * bk[:, :, None, :]     # [B, c, di, st]
+
+        def comb(l, r):
+            al, bl = l
+            ar, br = r
+            return al * ar, bl * ar + br
+
+        a_sc, b_sc = jax.lax.associative_scan(
+            comb, (jnp.exp(ldA), dbx), axis=1)
+        # a_sc[t] = prod_{u<=t} exp(ldA_u): carry-injection coefficient
+        h_all = b_sc + a_sc * h[:, None]
+        y = jnp.einsum("bcds,bcs->bcd", h_all, ck)
+        return h_all[:, -1], y
+
+    # remat per chunk: the associative scan's [B, c, di, st] intermediates
+    # would otherwise be saved for every chunk (a full [B, S, di, st] tensor)
+    h_last, ys = jax.lax.scan(jax.checkpoint(chunk_step), h0,
+                              (dt_c, x_c, b_c, c_c))
+    y = ys.transpose(1, 0, 2, 3).reshape(bb, s, di)
+    return y, h_last
+
+
+def mamba1_apply(p: Params, x: jax.Array, cfg: ArchConfig, *,
+                 cache: Optional[Params] = None, return_state: bool = False):
+    """x [B, S, d] -> (y, new_cache or None).  Decode when cache given (S=1);
+    return_state=True emits the final (h, conv) state for prefill->decode."""
+    b, s, d = x.shape
+    di, st, dtr = cfg.dinner(), cfg.ssm_state, cfg.dtrank()
+    sp = cfg.sparsity
+    xz = sp_linear_apply(p["in_proj"], x, sp)
+    xin, z = xz[..., :di], xz[..., di:]
+    xin = constrain(xin, "act_batch", "act_seq", "act_heads")
+
+    a = -jnp.exp(p["A_log"])                               # [di, st]
+    if cache is None:
+        xc, _ = _causal_conv(xin, p["conv_w"], p["conv_b"])
+        xc = jax.nn.silu(xc.astype(jnp.float32))
+        proj = sp_linear_apply(p["x_proj"], xc.astype(x.dtype), sp)
+        dt_r, bm, cm = (proj[..., :dtr], proj[..., dtr:dtr + st],
+                        proj[..., dtr + st:])
+        dt = jax.nn.softplus(
+            sp_linear_apply(p["dt_proj"], dt_r, sp).astype(jnp.float32))
+        h0 = jnp.zeros((b, di, st), jnp.float32)
+        y, h_last = _mamba1_core(dt, bm.astype(jnp.float32),
+                                 cm.astype(jnp.float32),
+                                 xc, a, h0, _pick(s, cfg.ssm_chunk))
+        new_cache = None
+        if return_state:
+            ck = cfg.conv_kernel
+            new_cache = {"h": h_last, "conv": xin[:, s - (ck - 1):, :]}
+    else:
+        xc, conv_state = _causal_conv(xin, p["conv_w"], p["conv_b"],
+                                      state=cache["conv"])
+        xc = jax.nn.silu(xc.astype(jnp.float32))
+        proj = sp_linear_apply(p["x_proj"], xc.astype(x.dtype), sp)
+        dt_r, bm, cm = (proj[..., :dtr], proj[..., dtr:dtr + st],
+                        proj[..., dtr + st:])
+        dt = jax.nn.softplus(
+            sp_linear_apply(p["dt_proj"], dt_r, sp).astype(jnp.float32))[:, 0]
+        h = cache["h"]
+        da = jnp.exp(dt[..., None] * a[None])              # [B, di, st]
+        dbx = (dt * xc[:, 0])[..., None] * bm[:, 0, None, :].astype(jnp.float32)
+        h = da * h + dbx
+        y = jnp.einsum("bds,bs->bd", h, cm[:, 0].astype(jnp.float32))[:, None]
+        new_cache = {"h": h, "conv": conv_state}
+
+    y = y + p["D"][None, None] * xc.astype(jnp.float32)
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    out = sp_linear_apply(p["out_proj"], y, sp)
+    return constrain(out, "act_batch", "act_seq", None), new_cache
+
+
+def _pick(s: int, want: int) -> int:
+    c = min(want, s)
+    while s % c:
+        c -= 1
+    return c
+
+
+# --------------------------------------------------------------------- Mamba2
+
+def mamba2_init(key, cfg: ArchConfig, dtype):
+    d, di, st = cfg.d_model, cfg.dinner(), cfg.ssm_state
+    nh = cfg.ssm_heads or di // 64
+    ck = cfg.conv_kernel
+    ks = jax.random.split(key, 4)
+    sp = cfg.sparsity
+    p, s = {}, {}
+    out = 2 * di + 2 * st + nh                 # x, z, B, C, dt packed
+    p["in_proj"], s["in_proj"] = sp_linear_init(ks[0], d, out, sp, dtype,
+                                                ("tp", "fsdp"))
+    p["conv_w"] = (jax.random.normal(ks[1], (di, ck), jnp.float32) * 0.1)
+    p["conv_b"] = jnp.zeros((di,), jnp.float32)
+    s["conv_w"], s["conv_b"] = ("tp", None), ("tp",)
+    p["A_log"] = jnp.log(jnp.linspace(1.0, 16.0, nh))
+    p["D"] = jnp.ones((nh,), jnp.float32)
+    p["dt_bias"] = jnp.zeros((nh,), jnp.float32)
+    s["A_log"], s["D"], s["dt_bias"] = ("tp",), ("tp",), ("tp",)
+    p["norm"], s["norm"] = rms_norm_init(di)
+    p["out_proj"], s["out_proj"] = sp_linear_init(ks[2], di, d, sp, dtype,
+                                                  ("fsdp", "tp"))
+    return p, s
+
+
+def mamba2_cache_init(cfg: ArchConfig, batch: int, dtype):
+    di, st, ck = cfg.dinner(), cfg.ssm_state, cfg.conv_kernel
+    nh = cfg.ssm_heads or di // 64
+    hd = di // nh
+    return ({"h": jnp.zeros((batch, nh, hd, st), jnp.float32),
+             "conv": jnp.zeros((batch, ck - 1, di), dtype)},
+            {"h": ("act_batch", "act_heads", None, None),
+             "conv": ("act_batch", None, "act_heads")})
+
+
+def _segsum_decay(ld: jax.Array) -> jax.Array:
+    """ld [B, c, nh] -> decay matrix L [B, c, c, nh], L[t,s] = exp(sum_{s<u<=t} ld_u),
+    lower-triangular (s <= t), else 0."""
+    cs = jnp.cumsum(ld, axis=1)                              # [B, c, nh]
+    diff = cs[:, :, None, :] - cs[:, None, :, :]             # t, s
+    c = ld.shape[1]
+    tri = jnp.tril(jnp.ones((c, c), bool))[None, :, :, None]
+    # mask BEFORE exp: exp of a large positive masked entry would propagate
+    # inf*0 = nan through the vjp of where.
+    return jnp.exp(jnp.where(tri, diff, -1e30))
+
+
+def mamba2_apply(p: Params, x: jax.Array, cfg: ArchConfig, *,
+                 cache: Optional[Params] = None, return_state: bool = False):
+    b, s, d = x.shape
+    di, st = cfg.dinner(), cfg.ssm_state
+    nh = cfg.ssm_heads or di // 64
+    hd = di // nh
+    sp = cfg.sparsity
+
+    z_x_bc_dt = sp_linear_apply(p["in_proj"], x, sp)
+    xin = z_x_bc_dt[..., :di]
+    z = z_x_bc_dt[..., di:2 * di]
+    bmat = z_x_bc_dt[..., 2 * di:2 * di + st].astype(jnp.float32)
+    cmat = z_x_bc_dt[..., 2 * di + st:2 * di + 2 * st].astype(jnp.float32)
+    dt = jax.nn.softplus(
+        z_x_bc_dt[..., 2 * di + 2 * st:].astype(jnp.float32)
+        + p["dt_bias"][None, None])                          # [B, S, nh]
+    a = -jnp.exp(p["A_log"])                                 # [nh]
+
+    if cache is None:
+        xc, _ = _causal_conv(xin, p["conv_w"], p["conv_b"])
+        xc = jax.nn.silu(xc.astype(jnp.float32)).reshape(b, s, nh, hd)
+        chunk = _pick(s, cfg.ssm_chunk)
+        nc = s // chunk
+        xck = xc.reshape(b, nc, chunk, nh, hd).transpose(1, 0, 2, 3, 4)
+        dtk = dt.reshape(b, nc, chunk, nh).transpose(1, 0, 2, 3)
+        bk = bmat.reshape(b, nc, chunk, st).transpose(1, 0, 2, 3)
+        ck_ = cmat.reshape(b, nc, chunk, st).transpose(1, 0, 2, 3)
+
+        def chunk_step(h, args):
+            xk, dk, bbk, cck = args
+            ld = dk * a[None, None]                          # [B, c, nh]
+            ldc = jnp.cumsum(ld, axis=1)
+            decay_l = _segsum_decay(ld)                      # [B,c,c,nh]
+            cb = jnp.einsum("bts,bus->btu", cck, bbk)        # [B, c, c]
+            y_intra = jnp.einsum("btu,btun,bunh->btnh",
+                                 cb, decay_l, dk[..., None] * xk)
+            # inter-chunk: contribution of carried state
+            y_inter = jnp.einsum("bts,bnhs,btn->btnh",
+                                 cck, h, jnp.exp(ldc))
+            # next state
+            rem = jnp.exp(ldc[:, -1:, :] - ldc)              # decay to chunk end
+            h_new = h * jnp.exp(ldc[:, -1])[..., None, None] + jnp.einsum(
+                "btn,btnh,bts->bnhs", dk * rem, xk, bbk)
+            return h_new, y_intra + y_inter
+
+        h0 = jnp.zeros((b, nh, hd, st), jnp.float32)
+        # remat per chunk (same S^2-residual avoidance as chunked attention)
+        h_last, ys = jax.lax.scan(jax.checkpoint(chunk_step), h0,
+                                  (xck, dtk, bk, ck_))
+        y = ys.transpose(1, 0, 2, 3, 4).reshape(b, s, nh, hd)
+        y = y + p["D"][None, None, :, None] * xc
+        new_cache = None
+        if return_state:
+            new_cache = {"h": h_last,
+                         "conv": xin[:, s - (cfg.conv_kernel - 1):, :]}
+    else:
+        xc1, conv_state = _causal_conv(xin, p["conv_w"], p["conv_b"],
+                                       state=cache["conv"])
+        xc = jax.nn.silu(xc1.astype(jnp.float32)).reshape(b, 1, nh, hd)
+        h = cache["h"]                                       # [B, nh, hd, st]
+        da = jnp.exp(dt[:, 0] * a[None])                     # [B, nh]
+        dbx = jnp.einsum("bn,bnh,bs->bnhs", dt[:, 0], xc[:, 0], bmat[:, 0])
+        h = h * da[..., None, None] + dbx
+        y = jnp.einsum("bnhs,bs->bnh", h, cmat[:, 0])[:, None]
+        y = y + p["D"][None, None, :, None] * xc
+        new_cache = {"h": h, "conv": conv_state}
+
+    y = y.reshape(b, s, di)
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(jnp.float32)
+    y = rms_norm(p["norm"], y.astype(x.dtype), cfg.norm_eps)
+    out = sp_linear_apply(p["out_proj"], y, sp)
+    return constrain(out, "act_batch", "act_seq", None), new_cache

@@ -1,0 +1,728 @@
+"""Model assembly: blocks per family, scan-over-layers stacks, decode caches.
+
+Every stack is a jax.lax.scan over stacked per-layer params (HLO size O(1) in
+depth — required for the 88–95-layer archs to lower quickly) with per-layer
+remat.  Heterogeneous patterns (gemma2 local/global pairs, zamba2 mamba groups
+with a shared attention block, whisper enc-dec) are expressed as scans over
+homogeneous super-layers.
+
+Public API (family-dispatched):
+  init_model(key, cfg)                         -> (params, specs)
+  forward(params, cfg, batch)                  -> (logits, aux)
+  init_caches(cfg, batch, max_len, dtype)      -> (caches, specs)
+  decode_step(params, cfg, caches, tokens, pos)-> (logits, new_caches)
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.api import constrain
+from repro.models import attention as attn
+from repro.models import ffn as ffn_mod
+from repro.models import ssm as ssm_mod
+from repro.models.common import (Params, cross_entropy, embed_apply, embed_init,
+                                 lm_head_apply, rms_norm, rms_norm_init)
+from repro.models.config import ArchConfig
+
+
+def _norm_init(cfg: ArchConfig):
+    return rms_norm_init(cfg.d_model)
+
+
+def _norm(p, x, cfg: ArchConfig):
+    return rms_norm(p, x, cfg.norm_eps, zero_centered=cfg.gemma_norm)
+
+
+def _maybe_remat(f, cfg: ArchConfig):
+    return jax.checkpoint(f) if cfg.remat else f
+
+
+def _stacked_scan(cfg: ArchConfig, body, carry, xs_tree):
+    """scan-over-layers with optional sqrt-remat grouping (§Perf):
+    remat_group=G stores G outer + L/G inner layer boundaries instead of L —
+    the difference between fitting and not fitting for the 88–95-layer archs.
+    body: (carry, layer_params) -> (carry, _)."""
+    l = jax.tree.leaves(xs_tree)[0].shape[0]
+    g = cfg.remat_group
+    if cfg.remat and g and g > 1 and l % g == 0:
+        xs2 = jax.tree.map(lambda a: a.reshape(g, l // g, *a.shape[1:]),
+                           xs_tree)
+
+        def group(c, gxs):
+            c, _ = jax.lax.scan(_maybe_remat(body, cfg), c, gxs)
+            return c, None
+
+        carry, _ = jax.lax.scan(jax.checkpoint(group), carry, xs2)
+        return carry
+    carry, _ = jax.lax.scan(_maybe_remat(body, cfg), carry, xs_tree)
+    return carry
+
+
+def _stack_init(key, n: int, one_init):
+    """vmap one_init over n keys -> stacked params + per-layer specs."""
+    keys = jax.random.split(key, n)
+    _, specs = one_init(keys[0])
+    stacked = jax.vmap(lambda k: one_init(k)[0])(keys)
+    specs = jax.tree.map(lambda t: ("stack",) + tuple(t), specs,
+                         is_leaf=lambda l: isinstance(l, tuple))
+    return stacked, specs
+
+
+# =============================================================== dense blocks
+
+def _dense_block_init(key, cfg: ArchConfig, dtype):
+    k1, k2 = jax.random.split(key)
+    p, s = {}, {}
+    p["ln1"], s["ln1"] = _norm_init(cfg)
+    p["attn"], s["attn"] = attn.mla_init(k1, cfg, dtype) if cfg.mla \
+        else attn.gqa_init(k1, cfg, dtype)
+    p["ln2"], s["ln2"] = _norm_init(cfg)
+    p["mlp"], s["mlp"] = ffn_mod.mlp_init(k2, cfg, dtype)
+    if cfg.post_norms:
+        p["pn1"], s["pn1"] = _norm_init(cfg)
+        p["pn2"], s["pn2"] = _norm_init(cfg)
+    return p, s
+
+
+def _dense_block_apply(p, x, cfg: ArchConfig, *, positions, window=None,
+                       cache=None, cache_pos=None, return_kv=False):
+    att = attn.mla_apply if cfg.mla else attn.gqa_apply
+    kw = dict(positions=positions, cache=cache, cache_pos=cache_pos,
+              return_kv=return_kv)
+    if not cfg.mla:
+        kw["window"] = window
+    a, new_cache = att(p["attn"], _norm(p["ln1"], x, cfg), cfg, **kw)
+    if cfg.post_norms:
+        a = _norm(p["pn1"], a, cfg)
+    x = x + a
+    h = ffn_mod.mlp_apply(p["mlp"], _norm(p["ln2"], x, cfg), cfg)
+    if cfg.post_norms:
+        h = _norm(p["pn2"], h, cfg)
+    return x + h, new_cache
+
+
+# ================================================================= MoE blocks
+
+def _moe_block_init(key, cfg: ArchConfig, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    p, s = {}, {}
+    p["ln1"], s["ln1"] = _norm_init(cfg)
+    p["attn"], s["attn"] = attn.mla_init(k1, cfg, dtype) if cfg.mla \
+        else attn.gqa_init(k1, cfg, dtype)
+    p["ln2"], s["ln2"] = _norm_init(cfg)
+    p["moe"], s["moe"] = ffn_mod.moe_init(k2, cfg, dtype)
+    if cfg.dense_residual:
+        p["mlp"], s["mlp"] = ffn_mod.mlp_init(k3, cfg, dtype)
+    return p, s
+
+
+def _moe_block_apply(p, x, cfg: ArchConfig, *, positions, cache=None,
+                     cache_pos=None, return_kv=False):
+    att = attn.mla_apply if cfg.mla else attn.gqa_apply
+    a, new_cache = att(p["attn"], _norm(p["ln1"], x, cfg), cfg,
+                       positions=positions, cache=cache, cache_pos=cache_pos,
+                       return_kv=return_kv)
+    x = x + a
+    xn = _norm(p["ln2"], x, cfg)
+    h, aux = ffn_mod.moe_apply(p["moe"], xn, cfg)
+    if cfg.dense_residual:
+        h = h + ffn_mod.mlp_apply(p["mlp"], xn, cfg)
+    return x + h, new_cache, aux
+
+
+# ================================================================ SSM blocks
+
+def _ssm_block_init(key, cfg: ArchConfig, dtype):
+    p, s = {}, {}
+    p["ln"], s["ln"] = _norm_init(cfg)
+    if cfg.mamba_version == 1:
+        p["mixer"], s["mixer"] = ssm_mod.mamba1_init(key, cfg, dtype)
+    else:
+        p["mixer"], s["mixer"] = ssm_mod.mamba2_init(key, cfg, dtype)
+    return p, s
+
+
+def _ssm_block_apply(p, x, cfg: ArchConfig, *, cache=None, return_state=False):
+    mix = ssm_mod.mamba1_apply if cfg.mamba_version == 1 else ssm_mod.mamba2_apply
+    y, new_cache = mix(p["mixer"], _norm(p["ln"], x, cfg), cfg, cache=cache,
+                       return_state=return_state)
+    return x + y, new_cache
+
+
+# ============================================================ family: LM-dense
+
+def _lm_dense_init(key, cfg: ArchConfig):
+    dtype = cfg.jdtype()
+    ke, kl, kf = jax.random.split(key, 3)
+    p, s = {}, {}
+    p["embed"], s["embed"] = embed_init(ke, cfg.vocab, cfg.d_model, dtype)
+    if cfg.local_global_period:
+        # gemma2: scan over (local, global) pairs
+        def pair_init(k):
+            k1, k2 = jax.random.split(k)
+            pl, sl = _dense_block_init(k1, cfg, dtype)
+            pg, sg = _dense_block_init(k2, cfg, dtype)
+            return {"local": pl, "global": pg}, {"local": sl, "global": sg}
+        p["pairs"], s["pairs"] = _stack_init(kl, cfg.n_layers // 2, pair_init)
+    else:
+        p["layers"], s["layers"] = _stack_init(
+            kl, cfg.n_layers, lambda k: _dense_block_init(k, cfg, dtype))
+    p["lnf"], s["lnf"] = _norm_init(cfg)
+    return p, s
+
+
+def _lm_dense_forward(p, cfg: ArchConfig, x, positions):
+    aux = jnp.zeros((), jnp.float32)
+
+    if cfg.local_global_period:
+        def pair(x, lp):
+            x, _ = _dense_block_apply(lp["local"], x, cfg, positions=positions,
+                                      window=cfg.window)
+            x, _ = _dense_block_apply(lp["global"], x, cfg, positions=positions)
+            return x, None
+        x = _stacked_scan(cfg, pair, x, p["pairs"])
+    else:
+        def body(x, lp):
+            x, _ = _dense_block_apply(lp, x, cfg, positions=positions)
+            return x, None
+        x = _stacked_scan(cfg, body, x, p["layers"])
+    return _norm(p["lnf"], x, cfg), aux
+
+
+def _stackc(tree, spec, n):
+    caches = jax.tree.map(lambda z: jnp.broadcast_to(z, (n,) + z.shape), tree)
+    specs = jax.tree.map(lambda t: ("stack",) + tuple(t), spec,
+                         is_leaf=lambda l: isinstance(l, tuple))
+    return caches, specs
+
+
+def _lm_dense_caches(cfg: ArchConfig, batch: int, max_len: int, dtype):
+    if cfg.local_global_period:
+        half = cfg.n_layers // 2
+        lone, lspec = attn.gqa_cache_init(cfg, batch, max_len, dtype,
+                                          window=cfg.window)  # ring buffer
+        gone, gspec = attn.gqa_cache_init(cfg, batch, max_len, dtype)
+        lc, ls = _stackc(lone, lspec, half)
+        gc_, gs = _stackc(gone, gspec, half)
+        return {"local": lc, "global": gc_}, {"local": ls, "global": gs}
+    one, spec = (attn.mla_cache_init(cfg, batch, max_len, dtype) if cfg.mla
+                 else attn.gqa_cache_init(cfg, batch, max_len, dtype))
+    return _stackc(one, spec, cfg.n_layers)
+
+
+def _lm_dense_decode(p, cfg: ArchConfig, caches, x, pos):
+    if cfg.local_global_period:
+        def pair(x, xs):
+            lp, cl, cg = xs
+            x, ncl = _dense_block_apply(lp["local"], x, cfg, positions=pos,
+                                        window=cfg.window, cache=cl,
+                                        cache_pos=pos)
+            x, ncg = _dense_block_apply(lp["global"], x, cfg, positions=pos,
+                                        cache=cg, cache_pos=pos)
+            return x, (ncl, ncg)
+        x, (nl, ng) = jax.lax.scan(
+            pair, x, (p["pairs"], caches["local"], caches["global"]))
+        new_caches = {"local": nl, "global": ng}
+    else:
+        def body(x, xs):
+            lp, cc = xs
+            x, nc = _dense_block_apply(lp, x, cfg, positions=pos, cache=cc,
+                                       cache_pos=pos)
+            return x, nc
+        x, new_caches = jax.lax.scan(body, x, (p["layers"], caches))
+    return _norm(p["lnf"], x, cfg), new_caches
+
+
+# ============================================================== family: MoE LM
+
+def _lm_moe_init(key, cfg: ArchConfig):
+    dtype = cfg.jdtype()
+    ke, kd, kl = jax.random.split(key, 3)
+    p, s = {}, {}
+    p["embed"], s["embed"] = embed_init(ke, cfg.vocab, cfg.d_model, dtype)
+    nd = cfg.first_dense_layers
+    if nd:
+        p["dense_layers"], s["dense_layers"] = _stack_init(
+            kd, nd, lambda k: _dense_block_init(k, cfg, dtype))
+    p["layers"], s["layers"] = _stack_init(
+        kl, cfg.n_layers - nd, lambda k: _moe_block_init(k, cfg, dtype))
+    p["lnf"], s["lnf"] = _norm_init(cfg)
+    return p, s
+
+
+def _lm_moe_forward(p, cfg: ArchConfig, x, positions):
+    aux = jnp.zeros((), jnp.float32)
+    if cfg.first_dense_layers:
+        def dbody(x, lp):
+            x, _ = _dense_block_apply(lp, x, cfg, positions=positions)
+            return x, None
+        x, _ = jax.lax.scan(_maybe_remat(dbody, cfg), x, p["dense_layers"])
+
+    def body(carry, lp):
+        x, aux = carry
+        x, _, a = _moe_block_apply(lp, x, cfg, positions=positions)
+        return (x, aux + a), None
+    x, aux = _stacked_scan(cfg, body, (x, aux), p["layers"])
+    return _norm(p["lnf"], x, cfg), aux / max(cfg.n_layers - cfg.first_dense_layers, 1)
+
+
+def _lm_moe_decode(p, cfg: ArchConfig, caches, x, pos):
+    nd = cfg.first_dense_layers
+    cd = jax.tree.map(lambda c: c[:nd], caches) if nd else None
+    cm = jax.tree.map(lambda c: c[nd:], caches)
+    new_d = None
+    if nd:
+        def dbody(x, xs):
+            lp, cc = xs
+            x, nc = _dense_block_apply(lp, x, cfg, positions=pos, cache=cc,
+                                       cache_pos=pos)
+            return x, nc
+        x, new_d = jax.lax.scan(dbody, x, (p["dense_layers"], cd))
+
+    def body(x, xs):
+        lp, cc = xs
+        x, nc, _ = _moe_block_apply(lp, x, cfg, positions=pos, cache=cc,
+                                    cache_pos=pos)
+        return x, nc
+    x, new_m = jax.lax.scan(body, x, (p["layers"], cm))
+    new_caches = (jax.tree.map(lambda a, b: jnp.concatenate([a, b]), new_d, new_m)
+                  if nd else new_m)
+    return _norm(p["lnf"], x, cfg), new_caches
+
+
+# ============================================================== family: SSM LM
+
+def _lm_ssm_init(key, cfg: ArchConfig):
+    dtype = cfg.jdtype()
+    ke, kl = jax.random.split(key)
+    p, s = {}, {}
+    p["embed"], s["embed"] = embed_init(ke, cfg.vocab, cfg.d_model, dtype)
+    p["layers"], s["layers"] = _stack_init(
+        kl, cfg.n_layers, lambda k: _ssm_block_init(k, cfg, dtype))
+    p["lnf"], s["lnf"] = _norm_init(cfg)
+    return p, s
+
+
+def _lm_ssm_forward(p, cfg: ArchConfig, x, positions):
+    def body(x, lp):
+        x, _ = _ssm_block_apply(lp, x, cfg)
+        return x, None
+    x = _stacked_scan(cfg, body, x, p["layers"])
+    return _norm(p["lnf"], x, cfg), jnp.zeros((), jnp.float32)
+
+
+def _lm_ssm_caches(cfg: ArchConfig, batch: int, max_len: int, dtype):
+    one, spec = (ssm_mod.mamba1_cache_init(cfg, batch, dtype)
+                 if cfg.mamba_version == 1
+                 else ssm_mod.mamba2_cache_init(cfg, batch, dtype))
+    n = cfg.n_layers
+    caches = jax.tree.map(lambda z: jnp.broadcast_to(z, (n,) + z.shape), one)
+    specs = jax.tree.map(lambda t: ("stack",) + tuple(t), spec,
+                         is_leaf=lambda l: isinstance(l, tuple))
+    return caches, specs
+
+
+def _lm_ssm_decode(p, cfg: ArchConfig, caches, x, pos):
+    def body(x, xs):
+        lp, cc = xs
+        x, nc = _ssm_block_apply(lp, x, cfg, cache=cc)
+        return x, nc
+    x, new_caches = jax.lax.scan(body, x, (p["layers"], caches))
+    return _norm(p["lnf"], x, cfg), new_caches
+
+
+# =========================================================== family: hybrid
+
+def _hybrid_shared_init(key, cfg: ArchConfig, dtype):
+    """Zamba2-style shared attention+MLP block (one set of params, applied
+    after every `attn_period` mamba blocks)."""
+    return _dense_block_init(key, cfg, dtype)
+
+
+def _lm_hybrid_init(key, cfg: ArchConfig):
+    dtype = cfg.jdtype()
+    ke, km, ks_, kr = jax.random.split(key, 4)
+    p, s = {}, {}
+    p["embed"], s["embed"] = embed_init(ke, cfg.vocab, cfg.d_model, dtype)
+    period = cfg.attn_period or cfg.n_layers
+    groups = cfg.n_layers // period
+    rem = cfg.n_layers - groups * period
+    if groups:
+        def group_init(k):
+            return _stack_init(k, period,
+                               lambda kk: _ssm_block_init(kk, cfg, dtype))
+        p["groups"], s["groups"] = _stack_init(km, groups, group_init)
+        p["shared"], s["shared"] = _hybrid_shared_init(ks_, cfg, dtype)
+    if rem:
+        p["tail"], s["tail"] = _stack_init(
+            kr, rem, lambda k: _ssm_block_init(k, cfg, dtype))
+    p["lnf"], s["lnf"] = _norm_init(cfg)
+    return p, s
+
+
+def _lm_hybrid_forward(p, cfg: ArchConfig, x, positions):
+    period = cfg.attn_period or cfg.n_layers
+
+    def one_mamba(x, lp):
+        x, _ = _ssm_block_apply(lp, x, cfg)
+        return x, None
+
+    if "groups" in p:
+        def group(x, gp):
+            x, _ = jax.lax.scan(_maybe_remat(one_mamba, cfg), x, gp)
+            # shared attention block (params closed over — weight sharing)
+            x, _ = _dense_block_apply(p["shared"], x, cfg, positions=positions,
+                                      window=cfg.window)
+            return x, None
+        # outer remat: store one boundary per group, not per mamba block
+        x, _ = jax.lax.scan(_maybe_remat(group, cfg), x, p["groups"])
+    if "tail" in p:
+        x, _ = jax.lax.scan(_maybe_remat(one_mamba, cfg), x, p["tail"])
+    return _norm(p["lnf"], x, cfg), jnp.zeros((), jnp.float32)
+
+
+def _lm_hybrid_caches(cfg: ArchConfig, batch: int, max_len: int, dtype):
+    period = cfg.attn_period or cfg.n_layers
+    groups = cfg.n_layers // period
+    rem = cfg.n_layers - groups * period
+    mk = (ssm_mod.mamba1_cache_init if cfg.mamba_version == 1
+          else ssm_mod.mamba2_cache_init)
+    one, ospec = mk(cfg, batch, cfg.jdtype())
+    caches: Dict[str, Any] = {}
+    specs: Dict[str, Any] = {}
+
+    def stackn(z, n):
+        return jnp.broadcast_to(z, (n,) + z.shape)
+
+    if groups:
+        caches["groups"] = jax.tree.map(
+            lambda z: stackn(stackn(z, period), groups), one)
+        specs["groups"] = jax.tree.map(
+            lambda t: ("stack", "stack") + tuple(t), ospec,
+            is_leaf=lambda l: isinstance(l, tuple))
+        a_one, a_spec = attn.gqa_cache_init(cfg, batch, max_len, cfg.jdtype(),
+                                            window=cfg.window)
+        caches["attn"] = jax.tree.map(lambda z: stackn(z, groups), a_one)
+        specs["attn"] = jax.tree.map(
+            lambda t: ("stack",) + tuple(t), a_spec,
+            is_leaf=lambda l: isinstance(l, tuple))
+    if rem:
+        caches["tail"] = jax.tree.map(lambda z: stackn(z, rem), one)
+        specs["tail"] = jax.tree.map(
+            lambda t: ("stack",) + tuple(t), ospec,
+            is_leaf=lambda l: isinstance(l, tuple))
+    return caches, specs
+
+
+def _lm_hybrid_decode(p, cfg: ArchConfig, caches, x, pos):
+    def one_mamba(x, xs):
+        lp, cc = xs
+        x, nc = _ssm_block_apply(lp, x, cfg, cache=cc)
+        return x, nc
+
+    new_caches = dict(caches)
+    if "groups" in p:
+        def group(x, xs):
+            gp, gc, ac = xs
+            x, ngc = jax.lax.scan(one_mamba, x, (gp, gc))
+            x, nac = _dense_block_apply(p["shared"], x, cfg, positions=pos,
+                                        window=cfg.window, cache=ac,
+                                        cache_pos=pos)
+            return x, (ngc, nac)
+        x, (ng, na) = jax.lax.scan(
+            group, x, (p["groups"], caches["groups"], caches["attn"]))
+        new_caches["groups"], new_caches["attn"] = ng, na
+    if "tail" in p:
+        x, nt = jax.lax.scan(one_mamba, x, (p["tail"], caches["tail"]))
+        new_caches["tail"] = nt
+    return _norm(p["lnf"], x, cfg), new_caches
+
+
+# ============================================================ family: enc-dec
+
+def _enc_block_init(key, cfg: ArchConfig, dtype):
+    k1, k2 = jax.random.split(key)
+    p, s = {}, {}
+    p["ln1"], s["ln1"] = _norm_init(cfg)
+    p["attn"], s["attn"] = attn.gqa_init(k1, cfg, dtype)
+    p["ln2"], s["ln2"] = _norm_init(cfg)
+    p["mlp"], s["mlp"] = ffn_mod.mlp_init(k2, cfg, dtype)
+    return p, s
+
+
+def _enc_block_apply(p, x, cfg: ArchConfig, positions):
+    b, s, d = x.shape
+    h, kv, hd = cfg.n_heads, cfg.n_kv, cfg.hd()
+    sp = cfg.sparsity
+    from repro.models.common import sp_linear_apply
+    xn = _norm(p["ln1"], x, cfg)
+    q = sp_linear_apply(p["attn"]["wq"], xn, sp).reshape(b, s, h, hd)
+    k = sp_linear_apply(p["attn"]["wk"], xn, sp).reshape(b, s, kv, hd)
+    v = sp_linear_apply(p["attn"]["wv"], xn, sp).reshape(b, s, kv, hd)
+    o = attn.chunked_attention(q, k, v, causal=False, q_chunk=cfg.q_chunk,
+                               kv_chunk=cfg.kv_chunk,
+                               chain_bf16=cfg.attn_chain_bf16)
+    x = x + sp_linear_apply(p["attn"]["wo"], o.reshape(b, s, h * hd), sp)
+    x = x + ffn_mod.mlp_apply(p["mlp"], _norm(p["ln2"], x, cfg), cfg)
+    return x
+
+
+def _dec_block_init(key, cfg: ArchConfig, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    p, s = {}, {}
+    p["ln1"], s["ln1"] = _norm_init(cfg)
+    p["self"], s["self"] = attn.gqa_init(k1, cfg, dtype)
+    p["ln2"], s["ln2"] = _norm_init(cfg)
+    p["cross"], s["cross"] = attn.cross_attn_init(k2, cfg, dtype)
+    p["ln3"], s["ln3"] = _norm_init(cfg)
+    p["mlp"], s["mlp"] = ffn_mod.mlp_init(k3, cfg, dtype)
+    return p, s
+
+
+def _dec_block_apply(p, x, cfg: ArchConfig, enc_kv, *, positions, cache=None,
+                     cache_pos=None, return_kv=False):
+    a, new_cache = attn.gqa_apply(p["self"], _norm(p["ln1"], x, cfg), cfg,
+                                  positions=positions, cache=cache,
+                                  cache_pos=cache_pos, return_kv=return_kv)
+    x = x + a
+    x = x + attn.cross_attn_apply(p["cross"], _norm(p["ln2"], x, cfg),
+                                  enc_kv, cfg)
+    x = x + ffn_mod.mlp_apply(p["mlp"], _norm(p["ln3"], x, cfg), cfg)
+    return x, new_cache
+
+
+def _encdec_init(key, cfg: ArchConfig):
+    dtype = cfg.jdtype()
+    ke, k1, k2, kf = jax.random.split(key, 4)
+    p, s = {}, {}
+    p["embed"], s["embed"] = embed_init(ke, cfg.vocab, cfg.d_model, dtype)
+    # conv frontend STUB: inputs are precomputed frame embeddings [B, Se, d]
+    p["enc_layers"], s["enc_layers"] = _stack_init(
+        k1, cfg.enc_layers, lambda k: _enc_block_init(k, cfg, dtype))
+    p["enc_lnf"], s["enc_lnf"] = _norm_init(cfg)
+    p["dec_layers"], s["dec_layers"] = _stack_init(
+        k2, cfg.n_layers, lambda k: _dec_block_init(k, cfg, dtype))
+    p["lnf"], s["lnf"] = _norm_init(cfg)
+    return p, s
+
+
+def _encode(p, cfg: ArchConfig, enc_embeds):
+    pos = jnp.arange(enc_embeds.shape[1])[None, :]
+
+    def body(x, lp):
+        return _enc_block_apply(lp, x, cfg, pos), None
+    x = _stacked_scan(cfg, body, enc_embeds, p["enc_layers"])
+    return _norm(p["enc_lnf"], x, cfg)
+
+
+def _encdec_forward(p, cfg: ArchConfig, x, positions, enc_embeds):
+    enc_out = _encode(p, cfg, enc_embeds)
+
+    def body(x, lp):
+        kv = attn.cross_kv(lp["cross"], enc_out, cfg)
+        x, _ = _dec_block_apply(lp, x, cfg, kv, positions=positions)
+        return x, None
+    x = _stacked_scan(cfg, body, x, p["dec_layers"])
+    return _norm(p["lnf"], x, cfg), jnp.zeros((), jnp.float32)
+
+
+def _encdec_caches(cfg: ArchConfig, batch: int, max_len: int, dtype):
+    one, spec = attn.gqa_cache_init(cfg, batch, max_len, dtype)
+    n = cfg.n_layers
+    caches = {"self": jax.tree.map(
+        lambda z: jnp.broadcast_to(z, (n,) + z.shape), one)}
+    specs = {"self": jax.tree.map(lambda t: ("stack",) + tuple(t), spec,
+                                  is_leaf=lambda l: isinstance(l, tuple))}
+    # precomputed cross K/V per layer (filled at prefill from encoder output)
+    kvshape = (n, batch, cfg.enc_seq, cfg.n_kv, cfg.hd())
+    caches["cross_k"] = jnp.zeros(kvshape, dtype)
+    caches["cross_v"] = jnp.zeros(kvshape, dtype)
+    specs["cross_k"] = ("stack", "act_batch", None, "act_heads", None)
+    specs["cross_v"] = ("stack", "act_batch", None, "act_heads", None)
+    return caches, specs
+
+
+def _encdec_decode(p, cfg: ArchConfig, caches, x, pos):
+    def body(x, xs):
+        lp, cc, ck, cv = xs
+        x, nc = _dec_block_apply(lp, x, cfg, (ck, cv), positions=pos,
+                                 cache=cc, cache_pos=pos)
+        return x, nc
+    x, new_self = jax.lax.scan(
+        body, x, (p["dec_layers"], caches["self"],
+                  caches["cross_k"], caches["cross_v"]))
+    new_caches = dict(caches, self=new_self)
+    return _norm(p["lnf"], x, cfg), new_caches
+
+
+# ==================================================================== prefill
+
+def _lm_dense_prefill(p, cfg: ArchConfig, x, positions):
+    if cfg.local_global_period:
+        def pair(x, lp):
+            x, kvl = _dense_block_apply(lp["local"], x, cfg, positions=positions,
+                                        window=cfg.window, return_kv=True)
+            x, kvg = _dense_block_apply(lp["global"], x, cfg,
+                                        positions=positions, return_kv=True)
+            return x, (kvl, kvg)
+        x, (kl, kg) = jax.lax.scan(_maybe_remat(pair, cfg), x, p["pairs"])
+        caches = {"local": kl, "global": kg}
+    else:
+        def body(x, lp):
+            x, kv = _dense_block_apply(lp, x, cfg, positions=positions,
+                                       return_kv=True)
+            return x, kv
+        x, caches = jax.lax.scan(_maybe_remat(body, cfg), x, p["layers"])
+    return _norm(p["lnf"], x, cfg), caches
+
+
+def _lm_moe_prefill(p, cfg: ArchConfig, x, positions):
+    caches = {}
+    if cfg.first_dense_layers:
+        def dbody(x, lp):
+            x, kv = _dense_block_apply(lp, x, cfg, positions=positions,
+                                       return_kv=True)
+            return x, kv
+        x, caches_d = jax.lax.scan(_maybe_remat(dbody, cfg), x,
+                                   p["dense_layers"])
+        caches["dense"] = caches_d
+
+    def body(x, lp):
+        x, kv, _ = _moe_block_apply(lp, x, cfg, positions=positions,
+                                    return_kv=True)
+        return x, kv
+    x, caches_m = jax.lax.scan(_maybe_remat(body, cfg), x, p["layers"])
+    caches["moe"] = caches_m
+    return _norm(p["lnf"], x, cfg), caches
+
+
+def _lm_ssm_prefill(p, cfg: ArchConfig, x, positions):
+    def body(x, lp):
+        x, st = _ssm_block_apply(lp, x, cfg, return_state=True)
+        return x, st
+    x, caches = jax.lax.scan(_maybe_remat(body, cfg), x, p["layers"])
+    return _norm(p["lnf"], x, cfg), caches
+
+
+def _lm_hybrid_prefill(p, cfg: ArchConfig, x, positions):
+    caches = {}
+
+    def one_mamba(x, lp):
+        x, st = _ssm_block_apply(lp, x, cfg, return_state=True)
+        return x, st
+
+    if "groups" in p:
+        def group(x, gp):
+            x, sts = jax.lax.scan(_maybe_remat(one_mamba, cfg), x, gp)
+            x, kv = _dense_block_apply(p["shared"], x, cfg, positions=positions,
+                                       window=cfg.window, return_kv=True)
+            return x, (sts, kv)
+        x, (gs, ga) = jax.lax.scan(group, x, p["groups"])
+        caches["groups"], caches["attn"] = gs, ga
+    if "tail" in p:
+        x, ts = jax.lax.scan(_maybe_remat(one_mamba, cfg), x, p["tail"])
+        caches["tail"] = ts
+    return _norm(p["lnf"], x, cfg), caches
+
+
+def _encdec_prefill(p, cfg: ArchConfig, x, positions, enc_embeds):
+    enc_out = _encode(p, cfg, enc_embeds)
+
+    def body(x, lp):
+        kv = attn.cross_kv(lp["cross"], enc_out, cfg)
+        x, skv = _dec_block_apply(lp, x, cfg, kv, positions=positions,
+                                  return_kv=True)
+        return x, (skv, kv)
+    x, (self_kv, cross) = jax.lax.scan(_maybe_remat(body, cfg), x,
+                                       p["dec_layers"])
+    caches = {"self": self_kv, "cross_k": cross[0], "cross_v": cross[1]}
+    return _norm(p["lnf"], x, cfg), caches
+
+
+# ==================================================================== dispatch
+
+_FAMS = {
+    "dense": (_lm_dense_init, _lm_dense_forward, _lm_dense_caches,
+              _lm_dense_decode, _lm_dense_prefill),
+    "vlm": (_lm_dense_init, _lm_dense_forward, _lm_dense_caches,
+            _lm_dense_decode, _lm_dense_prefill),
+    "moe": (_lm_moe_init, _lm_moe_forward, _lm_dense_caches, _lm_moe_decode,
+            _lm_moe_prefill),
+    "ssm": (_lm_ssm_init, _lm_ssm_forward, _lm_ssm_caches, _lm_ssm_decode,
+            _lm_ssm_prefill),
+    "hybrid": (_lm_hybrid_init, _lm_hybrid_forward, _lm_hybrid_caches,
+               _lm_hybrid_decode, _lm_hybrid_prefill),
+    "audio": (_encdec_init, _encdec_forward, _encdec_caches, _encdec_decode,
+              _encdec_prefill),
+}
+
+
+def init_model(key, cfg: ArchConfig):
+    return _FAMS[cfg.family][0](key, cfg)
+
+
+def _embed_in(p, cfg: ArchConfig, batch: Dict[str, Any]):
+    if "embeds" in batch:
+        x = batch["embeds"].astype(cfg.jdtype())
+    else:
+        x = embed_apply(p["embed"], batch["tokens"])
+    if cfg.scale_embeds:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    return x
+
+
+def forward(p, cfg: ArchConfig, batch: Dict[str, Any]):
+    """Full-sequence forward -> (logits, moe_aux)."""
+    x = _embed_in(p, cfg, batch)
+    b, s = x.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+    fwd = _FAMS[cfg.family][1]
+    if cfg.family == "audio":
+        x, aux = fwd(p, cfg, x, positions, batch["enc_embeds"].astype(cfg.jdtype()))
+    else:
+        x, aux = fwd(p, cfg, x, positions)
+    logits = lm_head_apply(p["embed"], x, cfg.softcap_final)
+    return logits, aux
+
+
+def loss_fn(p, cfg: ArchConfig, batch: Dict[str, Any],
+            aux_weight: float = 0.01):
+    logits, aux = forward(p, cfg, batch)
+    loss = cross_entropy(logits, batch["labels"])
+    return loss + aux_weight * aux, {"loss": loss, "moe_aux": aux}
+
+
+def init_caches(cfg: ArchConfig, batch: int, max_len: int):
+    return _FAMS[cfg.family][2](cfg, batch, max_len, cfg.jdtype())
+
+
+def decode_step(p, cfg: ArchConfig, caches, tokens: jax.Array, pos: jax.Array):
+    """One token: tokens [B] int32, pos scalar int32 -> (logits [B, V], caches)."""
+    x = embed_apply(p["embed"], tokens[:, None])
+    if cfg.scale_embeds:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    dec = _FAMS[cfg.family][3]
+    x, new_caches = dec(p, cfg, caches, x, pos)
+    logits = lm_head_apply(p["embed"], x, cfg.softcap_final)[:, 0]
+    return logits, new_caches
+
+
+def prefill(p, cfg: ArchConfig, batch: Dict[str, Any]):
+    """Inference prefill: full-sequence forward that emits per-layer caches and
+    only the last position's logits (no [B, S, V] materialization)."""
+    x = _embed_in(p, cfg, batch)
+    b, s = x.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+    pf = _FAMS[cfg.family][4]
+    if cfg.family == "audio":
+        x, caches = pf(p, cfg, x, positions,
+                       batch["enc_embeds"].astype(cfg.jdtype()))
+    else:
+        x, caches = pf(p, cfg, x, positions)
+    logits = lm_head_apply(p["embed"], x[:, -1:], cfg.softcap_final)[:, 0]
+    return logits, caches

@@ -1,0 +1,8 @@
+"""Optimizer substrate: sharded AdamW with fp32 master weights, schedules,
+global-norm clipping, gradient accumulation, gradient compression."""
+
+from repro.optim.adamw import (AdamWConfig, adamw_init, adamw_update,
+                               opt_state_specs, clip_by_global_norm)
+from repro.optim.schedule import warmup_cosine
+from repro.optim.compression import (quantize_int8, dequantize_int8,
+                                     compress_bf16, compressed_psum)

@@ -1,0 +1,76 @@
+"""Per-architecture smoke tests: reduced config of the same family, one
+forward/train step + one decode step on CPU; asserts shapes and no NaNs."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ALL_ARCHS, get_config
+from repro.data import SyntheticLMData
+from repro.models import (decode_step, forward, init_caches, init_model,
+                          loss_fn, prefill)
+from repro.optim import AdamWConfig, adamw_init, adamw_update
+
+B, S = 2, 32
+
+
+def _batch(cfg):
+    data = SyntheticLMData(cfg, B, S, seed=0)
+    return jax.tree.map(jnp.asarray, data.batch_at(0))
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_train_step_smoke(arch):
+    cfg = get_config(arch, smoke=True)
+    params, specs = init_model(jax.random.PRNGKey(0), cfg)
+    # specs mirror params structure
+    jax.tree.map(lambda p, s: None, params, specs,
+                 is_leaf=lambda l: isinstance(l, tuple))
+    batch = _batch(cfg)
+
+    logits, aux = forward(params, cfg, batch)
+    assert logits.shape == (B, S, cfg.vocab)
+    assert bool(jnp.isfinite(logits).all()), "non-finite logits"
+
+    loss, grads = jax.value_and_grad(lambda p: loss_fn(p, cfg, batch)[0])(params)
+    assert bool(jnp.isfinite(loss)), "non-finite loss"
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                      for g in jax.tree.leaves(grads)))
+    assert bool(jnp.isfinite(gn)), "non-finite grads"
+
+    ocfg = AdamWConfig(master_weights=False)
+    st = adamw_init(params, ocfg)
+    new_params, st, gnorm = adamw_update(grads, st, params, 1e-3, ocfg)
+    for a, b in zip(jax.tree.leaves(new_params), jax.tree.leaves(params)):
+        assert a.shape == b.shape and a.dtype == b.dtype
+    assert bool(jnp.isfinite(gnorm))
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_decode_step_smoke(arch):
+    cfg = get_config(arch, smoke=True)
+    params, _ = init_model(jax.random.PRNGKey(0), cfg)
+    caches, cspecs = init_caches(cfg, B, 64)
+    jax.tree.map(lambda c, s: None, caches, cspecs,
+                 is_leaf=lambda l: isinstance(l, tuple))
+    toks = jnp.array([1, 2], jnp.int32)
+    logits, caches = decode_step(params, cfg, caches, toks,
+                                 jnp.array(0, jnp.int32))
+    assert logits.shape == (B, cfg.vocab)
+    assert bool(jnp.isfinite(logits).all())
+    logits, caches = decode_step(params, cfg, caches, toks,
+                                 jnp.array(1, jnp.int32))
+    assert bool(jnp.isfinite(logits).all())
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_prefill_smoke(arch):
+    cfg = get_config(arch, smoke=True)
+    params, _ = init_model(jax.random.PRNGKey(0), cfg)
+    batch = _batch(cfg)
+    batch.pop("labels")
+    logits, caches = prefill(params, cfg, batch)
+    assert logits.shape == (B, cfg.vocab)
+    assert bool(jnp.isfinite(logits).all())
+    assert len(jax.tree.leaves(caches)) > 0

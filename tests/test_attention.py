@@ -1,0 +1,149 @@
+"""Attention correctness: chunked online-softmax vs naive, GQA grouping,
+windows, softcap, MLA, ring-buffer decode caches."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.sparse_matmul import SparsityConfig
+from repro.models.attention import (chunked_attention, gqa_apply,
+                                    gqa_cache_init, gqa_init, mla_apply,
+                                    mla_cache_init, mla_init)
+from repro.models.config import ArchConfig
+
+
+def naive(q, k, v, causal=True, window=None, cap=None):
+    b, sq, h, d = q.shape
+    _, sk, kvh, _ = k.shape
+    g = h // kvh
+    qg = q.reshape(b, sq, kvh, g, d)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k) / jnp.sqrt(d)
+    if cap:
+        s = cap * jnp.tanh(s / cap)
+    qpos = jnp.arange(sq) + (sk - sq)
+    kpos = jnp.arange(sk)
+    mask = jnp.ones((sq, sk), bool)
+    if causal:
+        mask &= qpos[:, None] >= kpos[None, :]
+    if window:
+        mask &= qpos[:, None] - kpos[None, :] < window
+    s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhgqk,bkhd->bqhgd", p, v).reshape(b, sq, h, d)
+
+
+@pytest.mark.parametrize("case", [
+    dict(sq=64, sk=64, h=4, kvh=2, causal=True),
+    dict(sq=64, sk=64, h=4, kvh=4, causal=True, window=16),
+    dict(sq=32, sk=64, h=8, kvh=2, causal=True, cap=50.0),
+    dict(sq=64, sk=64, h=2, kvh=2, causal=False),
+    dict(sq=48, sk=48, h=6, kvh=3, causal=True, window=7),
+])
+def test_chunked_matches_naive(case):
+    sq, sk = case["sq"], case["sk"]
+    h, kvh = case["h"], case["kvh"]
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (2, sq, h, 32))
+    k = jax.random.normal(ks[1], (2, sk, kvh, 32))
+    v = jax.random.normal(ks[2], (2, sk, kvh, 32))
+    kw = dict(causal=case.get("causal", True), window=case.get("window"),
+              cap=case.get("cap"))
+    a = chunked_attention(q, k, v, q_chunk=16, kv_chunk=16, **kw)
+    b_ = naive(q, k, v, **kw)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b_),
+                               rtol=2e-4, atol=2e-4)
+
+
+from hypothesis import given, settings, strategies as st
+
+
+@settings(max_examples=12, deadline=None)
+@given(sq=st.sampled_from([16, 32, 48]), h=st.sampled_from([2, 4, 6]),
+       kvh_div=st.sampled_from([1, 2]), qc=st.sampled_from([8, 16]),
+       kc=st.sampled_from([8, 16]), seed=st.integers(0, 2**31 - 1))
+def test_prop_chunked_equals_naive(sq, h, kvh_div, qc, kc, seed):
+    """Property: chunked online-softmax == naive attention for arbitrary
+    (shape, GQA grouping, chunking) combinations."""
+    kvh = h // kvh_div
+    if h % kvh:
+        return
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(ks[0], (2, sq, h, 16))
+    k = jax.random.normal(ks[1], (2, sq, kvh, 16))
+    v = jax.random.normal(ks[2], (2, sq, kvh, 16))
+    a = chunked_attention(q, k, v, causal=True, q_chunk=qc, kv_chunk=kc)
+    b_ = naive(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b_),
+                               rtol=3e-4, atol=3e-4)
+
+
+def test_chunked_grad_finite():
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = jax.random.normal(ks[0], (1, 32, 4, 16))
+    k = jax.random.normal(ks[1], (1, 32, 2, 16))
+    v = jax.random.normal(ks[2], (1, 32, 2, 16))
+    g = jax.grad(lambda q: chunked_attention(q, k, v, q_chunk=8,
+                                             kv_chunk=8).sum())(q)
+    assert bool(jnp.isfinite(g).all())
+
+
+def _cfg(**kw):
+    base = dict(name="t", family="dense", n_layers=1, d_model=64, n_heads=4,
+                n_kv=2, d_ff=128, vocab=64, head_dim=16, dtype="float32",
+                q_chunk=8, kv_chunk=8,
+                sparsity=SparsityConfig(enabled=False, mode="dense"))
+    base.update(kw)
+    return ArchConfig(**base)
+
+
+def test_gqa_decode_matches_forward():
+    cfg = _cfg()
+    p, _ = gqa_init(jax.random.PRNGKey(0), cfg, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, 64)) * 0.5
+    pos = jnp.broadcast_to(jnp.arange(16)[None], (2, 16))
+    y_full, _ = gqa_apply(p, x, cfg, positions=pos)
+    cache, _ = gqa_cache_init(cfg, 2, 16, jnp.float32)
+    ys = []
+    for t in range(16):
+        y1, cache = gqa_apply(p, x[:, t:t + 1], cfg,
+                              positions=jnp.array(t), cache=cache,
+                              cache_pos=jnp.array(t))
+        ys.append(y1)
+    np.testing.assert_allclose(np.asarray(jnp.concatenate(ys, 1)),
+                               np.asarray(y_full), rtol=2e-3, atol=2e-3)
+
+
+def test_ring_cache_matches_full_window():
+    """Windowed decode with a ring buffer == decode with a full-length cache
+    + window mask, beyond the wrap point."""
+    cfg = _cfg(window=8)
+    p, _ = gqa_init(jax.random.PRNGKey(2), cfg, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(3), (1, 24, 64)) * 0.5
+    ring, _ = gqa_cache_init(cfg, 1, 24, jnp.float32, window=8)
+    full, _ = gqa_cache_init(cfg, 1, 24, jnp.float32)
+    assert ring["k"].shape[1] == 8 and full["k"].shape[1] == 24
+    for t in range(24):
+        yr, ring = gqa_apply(p, x[:, t:t + 1], cfg, positions=jnp.array(t),
+                             window=8, cache=ring, cache_pos=jnp.array(t))
+        yf, full = gqa_apply(p, x[:, t:t + 1], cfg, positions=jnp.array(t),
+                             window=8, cache=full, cache_pos=jnp.array(t))
+        np.testing.assert_allclose(np.asarray(yr), np.asarray(yf),
+                                   rtol=2e-3, atol=2e-3, err_msg=f"t={t}")
+
+
+def test_mla_decode_matches_forward():
+    cfg = _cfg(mla=True, kv_lora=32, qk_nope_dim=16, qk_rope_dim=8,
+               v_head_dim=16)
+    p, _ = mla_init(jax.random.PRNGKey(4), cfg, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(5), (2, 16, 64)) * 0.5
+    pos = jnp.broadcast_to(jnp.arange(16)[None], (2, 16))
+    y_full, _ = mla_apply(p, x, cfg, positions=pos)
+    cache, _ = mla_cache_init(cfg, 2, 16, jnp.float32)
+    ys = []
+    for t in range(16):
+        y1, cache = mla_apply(p, x[:, t:t + 1], cfg, positions=jnp.array(t),
+                              cache=cache, cache_pos=jnp.array(t))
+        ys.append(y1)
+    np.testing.assert_allclose(np.asarray(jnp.concatenate(ys, 1)),
+                               np.asarray(y_full), rtol=3e-3, atol=3e-3)

@@ -1,0 +1,97 @@
+"""Common building blocks: norms, rope, softcap, losses, kernels/flash
+export sanity, roofline helpers."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.common import (apply_rope, cross_entropy, layer_norm,
+                                 layer_norm_init, rms_norm, rms_norm_init,
+                                 rope_angles, softcap)
+
+
+def test_rms_norm_unit_variance():
+    p, _ = rms_norm_init(64)
+    x = jax.random.normal(jax.random.PRNGKey(0), (4, 64)) * 7.0
+    y = rms_norm(p, x)
+    rms = np.sqrt(np.mean(np.asarray(y) ** 2, axis=-1))
+    np.testing.assert_allclose(rms, 1.0, rtol=1e-3)
+
+
+def test_rms_norm_zero_centered_scale():
+    p, _ = rms_norm_init(8)
+    x = jnp.ones((1, 8))
+    # scale=1 plain vs (1+scale) gemma-style with scale=0 must agree
+    y1 = rms_norm({"scale": jnp.ones((8,))}, x)
+    y2 = rms_norm({"scale": jnp.zeros((8,))}, x, zero_centered=True)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), rtol=1e-6)
+
+
+def test_layer_norm_moments():
+    p, _ = layer_norm_init(32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 32)) * 3 + 5
+    y = np.asarray(layer_norm(p, x))
+    np.testing.assert_allclose(y.mean(-1), 0.0, atol=1e-4)
+    np.testing.assert_allclose(y.std(-1), 1.0, atol=1e-2)
+
+
+def test_rope_preserves_norm_and_relativity():
+    d = 32
+    q = jax.random.normal(jax.random.PRNGKey(2), (1, 4, 1, d))
+    cos, sin = rope_angles(jnp.arange(4)[None, :], d, 10000.0)
+    qr = apply_rope(q, cos, sin)
+    # rotation preserves norms
+    np.testing.assert_allclose(np.linalg.norm(np.asarray(q), axis=-1),
+                               np.linalg.norm(np.asarray(qr), axis=-1),
+                               rtol=1e-5)
+    # dot products depend only on relative position
+    k = jax.random.normal(jax.random.PRNGKey(3), (1, 1, 1, d))
+    kk = jnp.broadcast_to(k, (1, 4, 1, d))
+    kr = apply_rope(kk, cos, sin)
+    d01 = float(jnp.sum(qr[0, 0] * kr[0, 1]))
+    # shift both by +2 positions
+    cos2, sin2 = rope_angles(jnp.arange(2, 6)[None, :], d, 10000.0)
+    qr2 = apply_rope(q, cos2, sin2)
+    kr2 = apply_rope(kk, cos2, sin2)
+    d23 = float(jnp.sum(qr2[0, 0] * kr2[0, 1]))
+    assert d01 == pytest.approx(d23, rel=1e-4)
+
+
+def test_softcap_bounds():
+    x = jnp.linspace(-1000, 1000, 101)
+    y = np.asarray(softcap(x, 50.0))
+    assert np.abs(y).max() <= 50.0
+    np.testing.assert_allclose(np.asarray(softcap(x, None)), np.asarray(x))
+
+
+def test_cross_entropy_ignore_and_uniform():
+    logits = jnp.zeros((1, 4, 7))
+    labels = jnp.array([[1, 2, -1, 3]])
+    loss = float(cross_entropy(logits, labels, ignore_id=-1))
+    assert loss == pytest.approx(np.log(7.0), rel=1e-5)
+
+
+def test_roofline_terms():
+    from repro.launch.roofline import RooflineTerms
+    t = RooflineTerms(flops=197e12, bytes_accessed=819e9,
+                      collective_bytes=25e9, chips=2, model_flops=197e12)
+    assert t.compute_s() == pytest.approx(1.0)
+    assert t.memory_s() == pytest.approx(1.0)
+    assert t.collective_s() == pytest.approx(0.5)
+    assert t.dominant() in ("compute", "memory")
+    assert t.useful_flops_ratio() == pytest.approx(0.5)
+    assert t.roofline_fraction() == pytest.approx(0.5)
+
+
+def test_param_counts_exact_moe():
+    import dataclasses
+    from repro.launch.roofline import param_counts_exact
+    from repro.configs import get_config
+    cfg = get_config("deepseek-v2-lite-16b", smoke=True)
+    from repro.models import init_model
+    params, _ = init_model(jax.random.PRNGKey(0), cfg)
+    shapes = jax.tree.map(
+        lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), params)
+    total, active = param_counts_exact(shapes, cfg)
+    assert 0 < active < total

@@ -1,0 +1,54 @@
+"""Flash-attention Pallas kernel vs the chunked-attention oracle
+(interpret=True on CPU; TPU is the target)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention import flash_attention_kernel, flash_traffic
+from repro.models.attention import chunked_attention
+
+
+@pytest.mark.parametrize("case", [
+    dict(sq=128, sk=128, causal=True),
+    dict(sq=128, sk=128, causal=True, window=32),
+    dict(sq=64, sk=128, causal=True),           # decode-ish suffix queries
+    dict(sq=128, sk=128, causal=False),
+    dict(sq=128, sk=128, causal=True, cap=30.0),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_matches_oracle(case, dtype):
+    bh, d = 4, 64
+    sq, sk = case["sq"], case["sk"]
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (bh, sq, d), jnp.float32).astype(dtype)
+    k = jax.random.normal(ks[1], (bh, sk, d), jnp.float32).astype(dtype)
+    v = jax.random.normal(ks[2], (bh, sk, d), jnp.float32).astype(dtype)
+    y = flash_attention_kernel(q, k, v, causal=case.get("causal", True),
+                               window=case.get("window"),
+                               cap=case.get("cap"), block=(32, 64),
+                               interpret=True)
+    # oracle: chunked attention with [BH] folded to [B=bh, H=1]
+    y_ref = chunked_attention(
+        q.astype(jnp.float32)[:, :, None, :],
+        k.astype(jnp.float32)[:, :, None, :],
+        v.astype(jnp.float32)[:, :, None, :],
+        causal=case.get("causal", True), window=case.get("window"),
+        cap=case.get("cap"), q_chunk=32, kv_chunk=32)[:, :, 0, :]
+    tol = dict(rtol=3e-2, atol=3e-2) if dtype == jnp.bfloat16 \
+        else dict(rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(y, jnp.float32),
+                               np.asarray(y_ref), **tol)
+
+
+def test_flash_traffic_beats_unfused():
+    """The kernel's HBM model must be far below the unfused chain: the
+    measured baseline materializes ~6 [cq, ck] f32 tensors per block pair
+    (score, mask-select, exp, sum-correction, p, p@v operand reload)."""
+    bh, s, d = 16, 32768, 128
+    t = flash_traffic(bh, s, s, d, d)
+    chain_bytes = 6 * 4.0 * bh * s * s        # six f32 [S, S] passes per head
+    assert t["hbm_bytes"] < chain_bytes / 20
+    # and kv re-streaming (the kernel's own cost) dominates its budget
+    assert t["kv_bytes"] > 0.8 * t["hbm_bytes"]

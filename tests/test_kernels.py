@@ -1,0 +1,127 @@
+"""Pallas kernel validation: shape/dtype sweeps vs the pure-jnp ref oracle,
+executed with interpret=True on CPU (TPU is the lowering target)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.sparsity import compress
+from repro.kernels import ops as kops
+from repro.kernels import ref as kref
+
+SHAPES = [  # (batch/rows, out, k)
+    (8, 16, 32),            # tiny, unaligned with default blocks
+    (64, 128, 256),
+    (130, 96, 520),         # deliberately ragged -> padding paths
+    (256, 256, 512),
+]
+NM = [(1, 4), (2, 4), (1, 2)]
+DTYPES = [jnp.float32, jnp.bfloat16]
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 \
+        else dict(rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("nm", NM)
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_nm_xwt_kernel_matches_ref(nm, shape, dtype):
+    n, m = nm
+    b, o, k = shape
+    k = -(-k // m) * m
+    kw = jax.random.split(jax.random.PRNGKey(0))
+    w = jax.random.normal(kw[0], (o, k), jnp.float32).astype(dtype)
+    x = jax.random.normal(kw[1], (b, k), jnp.float32).astype(dtype)
+    sp = compress(w, n, m)
+    y = kops.nm_xwt(x, sp.values, sp.indices, n, m, interpret=True)
+    y_ref = kref.nm_xwt_ref(x.astype(jnp.float32),
+                            sp.values.astype(jnp.float32), sp.indices, n, m)
+    np.testing.assert_allclose(np.asarray(y, jnp.float32),
+                               np.asarray(y_ref), **_tol(dtype))
+
+
+@pytest.mark.parametrize("nm", NM)
+@pytest.mark.parametrize("shape", SHAPES[:3])
+def test_nm_spmm_kernel_matches_ref(nm, shape):
+    n, m = nm
+    r, c, k = shape
+    k = -(-k // m) * m
+    kw = jax.random.split(jax.random.PRNGKey(1))
+    a = jax.random.normal(kw[0], (r, k), jnp.float32)
+    b = jax.random.normal(kw[1], (k, c), jnp.float32)
+    sp = compress(a, n, m)
+    y = kops.nm_spmm(sp.values, sp.indices, b, n, m, interpret=True)
+    y_ref = kref.nm_spmm_ref(sp.values, sp.indices, b, n, m)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("nm", NM)
+@pytest.mark.parametrize("mode", ["gather", "onehot"])
+def test_nm_spmv_kernel_matches_ref(nm, mode):
+    n, m = nm
+    b, o, k = 4, 192, 512
+    kw = jax.random.split(jax.random.PRNGKey(2))
+    w = jax.random.normal(kw[0], (o, k), jnp.float32)
+    x = jax.random.normal(kw[1], (b, k), jnp.float32)
+    sp = compress(w, n, m)
+    y = kops.nm_spmv(x, sp.values, sp.indices, n, m, mode=mode,
+                     interpret=True)
+    y_ref = kref.nm_spmv_ref(x, sp.values, sp.indices, n, m)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_kernel_custom_blocks():
+    n, m = 2, 4
+    w = jax.random.normal(jax.random.PRNGKey(3), (128, 256))
+    x = jax.random.normal(jax.random.PRNGKey(4), (32, 256))
+    sp = compress(w, n, m)
+    y_ref = kref.nm_xwt_ref(x, sp.values, sp.indices, n, m)
+    for block in [(16, 64, 128), (32, 128, 256), (8, 128, 64)]:
+        y = kops.nm_xwt(x, sp.values, sp.indices, n, m, block=block,
+                        interpret=True)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                                   rtol=1e-4, atol=1e-4)
+
+
+def test_leading_dims_flattened():
+    n, m = 2, 4
+    w = jax.random.normal(jax.random.PRNGKey(5), (64, 128))
+    x = jax.random.normal(jax.random.PRNGKey(6), (2, 3, 128))
+    sp = compress(w, n, m)
+    y = kops.nm_xwt(x, sp.values, sp.indices, n, m, interpret=True)
+    assert y.shape == (2, 3, 64)
+    y_ref = kref.nm_xwt_ref(x.reshape(-1, 128), sp.values, sp.indices, n, m)
+    np.testing.assert_allclose(np.asarray(y.reshape(-1, 64)),
+                               np.asarray(y_ref), rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("nm", NM)
+def test_packed_index_kernel_matches_ref(nm):
+    """The paper's bit-packed col_idx stream consumed directly by the kernel
+    (unpack-in-VMEM): must agree with the int8-index path and the oracle."""
+    n, m = nm
+    w = jax.random.normal(jax.random.PRNGKey(7), (192, 512))
+    x = jax.random.normal(jax.random.PRNGKey(8), (24, 512))
+    sp = compress(w, n, m)
+    y_ref = kref.nm_xwt_ref(x, sp.values, sp.indices, n, m)
+    y_pk = kops.nm_xwt(x, sp.values, sp.indices, n, m, interpret=True,
+                       packed=True)
+    np.testing.assert_allclose(np.asarray(y_pk), np.asarray(y_ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_traffic_model_sparse_beats_dense():
+    from repro.kernels.ops import traffic_mm, traffic_spmv
+    s = traffic_mm(512, 1024, 4096, 2, 4, sparse=True)
+    d = traffic_mm(512, 1024, 4096, 2, 4, sparse=False)
+    assert s["w_bytes"] < d["w_bytes"]
+    assert s["x_bytes"] == d["x_bytes"]
+    sv = traffic_spmv(8, 1024, 4096, 2, 4, sparse=True)
+    dv = traffic_spmv(8, 1024, 4096, 2, 4, sparse=False)
+    # decode regime: weight stream dominates; 2:4 cuts it by ~44 %
+    assert sv["w_bytes"] / dv["w_bytes"] == pytest.approx(0.5625, rel=1e-3)

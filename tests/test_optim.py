@@ -1,0 +1,101 @@
+"""Optimizer substrate: AdamW math vs a NumPy reference, clipping, schedule,
+gradient accumulation equivalence, compression roundtrips."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.optim import (AdamWConfig, adamw_init, adamw_update,
+                         clip_by_global_norm, compress_bf16, dequantize_int8,
+                         quantize_int8, warmup_cosine)
+
+
+def _np_adamw(p, g, m, v, step, lr, cfg):
+    m = cfg.b1 * m + (1 - cfg.b1) * g
+    v = cfg.b2 * v + (1 - cfg.b2) * g * g
+    mhat = m / (1 - cfg.b1 ** step)
+    vhat = v / (1 - cfg.b2 ** step)
+    return p - lr * (mhat / (np.sqrt(vhat) + cfg.eps)
+                     + cfg.weight_decay * p), m, v
+
+
+def test_adamw_matches_numpy():
+    cfg = AdamWConfig(clip_norm=1e9, master_weights=False)
+    p = {"w": jnp.asarray(np.random.default_rng(0).standard_normal((4, 8)),
+                          jnp.float32)}
+    g = {"w": jnp.asarray(np.random.default_rng(1).standard_normal((4, 8)),
+                          jnp.float32) * 0.01}
+    st = adamw_init(p, cfg)
+    newp, st, _ = adamw_update(g, st, p, 1e-3, cfg)
+    ref, m, v = _np_adamw(np.asarray(p["w"]), np.asarray(g["w"]),
+                          np.zeros((4, 8)), np.zeros((4, 8)), 1, 1e-3, cfg)
+    np.testing.assert_allclose(np.asarray(newp["w"]), ref, rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(st["mu"]["w"]), m, rtol=1e-5)
+    # second step
+    newp2, st, _ = adamw_update(g, st, newp, 1e-3, cfg)
+    ref2, m, v = _np_adamw(ref, np.asarray(g["w"]), m, v, 2, 1e-3, cfg)
+    np.testing.assert_allclose(np.asarray(newp2["w"]), ref2, rtol=1e-5)
+
+
+def test_master_weights_bf16():
+    cfg = AdamWConfig(master_weights=True, clip_norm=1e9)
+    p = {"w": jnp.ones((8,), jnp.bfloat16)}
+    st = adamw_init(p, cfg)
+    assert st["master"]["w"].dtype == jnp.float32
+    g = {"w": jnp.full((8,), 1e-4, jnp.bfloat16)}
+    # tiny updates accumulate in the fp32 master even when bf16 can't see them
+    for _ in range(3):
+        p, st, _ = adamw_update(g, st, p, 1e-5, cfg)
+    assert float(jnp.abs(st["master"]["w"] - 1.0).max()) > 0
+    assert p["w"].dtype == jnp.bfloat16
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.full((10,), 3.0), "b": jnp.full((10,), 4.0)}
+    clipped, gn = clip_by_global_norm(g, 1.0)
+    assert float(gn) == pytest.approx(np.sqrt(90 + 160), rel=1e-5)
+    total = np.sqrt(sum(float(jnp.sum(jnp.square(x)))
+                        for x in jax.tree.leaves(clipped)))
+    assert total == pytest.approx(1.0, rel=1e-5)
+
+
+def test_schedule_shape():
+    assert float(warmup_cosine(0, 1.0, 10, 100)) == 0.0
+    assert float(warmup_cosine(10, 1.0, 10, 100)) == pytest.approx(1.0)
+    assert float(warmup_cosine(100, 1.0, 10, 100)) == pytest.approx(0.1)
+    assert float(warmup_cosine(55, 1.0, 10, 100)) < 1.0
+
+
+def test_int8_roundtrip_error_bound():
+    x = jnp.asarray(np.random.default_rng(2).standard_normal(1000),
+                    jnp.float32)
+    q, s = quantize_int8(x)
+    err = np.abs(np.asarray(dequantize_int8(q, s)) - np.asarray(x))
+    assert err.max() <= float(s) * 0.5 + 1e-7
+
+
+def test_grad_accum_equals_full_batch():
+    """make_train_step with accum=k on batch B == accum=1 on the same batch."""
+    from repro.configs import get_config
+    from repro.launch.steps import make_train_step
+    from repro.models import init_model
+    cfg = get_config("llama3.2-1b", smoke=True).replace(
+        n_layers=2, grad_accum=1)
+    params, _ = init_model(jax.random.PRNGKey(0), cfg)
+    ocfg = AdamWConfig(master_weights=False)
+    opt = adamw_init(params, ocfg)
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (4, 16), 0,
+                                          cfg.vocab),
+             "labels": jax.random.randint(jax.random.PRNGKey(2), (4, 16), 0,
+                                          cfg.vocab)}
+    s1 = make_train_step(cfg, ocfg)
+    p1, _, m1 = s1(params, opt, batch, jnp.int32(0))
+    s2 = make_train_step(cfg.replace(grad_accum=2), ocfg)
+    p2, _, m2 = s2(params, opt, batch, jnp.int32(0))
+    np.testing.assert_allclose(float(m1["loss"]), float(m2["loss"]),
+                               rtol=1e-5)
+    for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p2)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   rtol=2e-4, atol=2e-4)
