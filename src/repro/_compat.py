@@ -1,0 +1,62 @@
+"""Forward-compatibility shims for the pinned jax version.
+
+The test-suite (and newer example code) is written against the current jax
+public API; the container pins jax 0.4.37, which predates two pieces of it:
+
+  * ``jax.shard_map`` — only ``jax.experimental.shard_map.shard_map`` exists;
+  * the ``check_vma=`` keyword — 0.4.37 spells it ``check_rep=``;
+  * ``pallas.tpu.CompilerParams`` — 0.4.37 spells it ``TPUCompilerParams``.
+
+``install()`` patches the installed jax module in place so both spellings
+work.  It is idempotent and a no-op on jax versions that already provide the
+modern API.  It is invoked from ``src/sitecustomize.py`` so that freshly
+spawned subprocesses (the multi-device tests run children with
+``PYTHONPATH=src``) get the patch before their first ``from jax import
+shard_map`` line executes.
+
+Importing jax here does NOT initialize a backend: XLA_FLAGS such as
+``--xla_force_host_platform_device_count`` are read at first device use, so
+the dry-run's set-flags-before-first-use contract is preserved.
+"""
+
+from __future__ import annotations
+
+import functools
+import inspect
+
+
+def install() -> None:
+    try:
+        import jax
+    except ImportError:  # pragma: no cover - jax is a hard dep of the repo
+        return
+
+    _install_pallas_names()
+
+    if getattr(jax, "shard_map", None) is not None:
+        return
+
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    accepts_vma = "check_vma" in inspect.signature(_shard_map).parameters
+    if accepts_vma:  # pragma: no cover - future jax with top-level missing
+        jax.shard_map = _shard_map
+        return
+
+    @functools.wraps(_shard_map)
+    def shard_map(f, *args, check_vma=None, **kwargs):
+        if check_vma is not None:
+            kwargs.setdefault("check_rep", check_vma)
+        return _shard_map(f, *args, **kwargs)
+
+    jax.shard_map = shard_map
+
+
+def _install_pallas_names() -> None:
+    try:
+        from jax.experimental.pallas import tpu as pltpu
+    except ImportError:  # pragma: no cover - pallas always ships with jax
+        return
+    if not hasattr(pltpu, "CompilerParams") and \
+            hasattr(pltpu, "TPUCompilerParams"):
+        pltpu.CompilerParams = pltpu.TPUCompilerParams

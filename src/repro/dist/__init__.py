@@ -1,0 +1,24 @@
+"""Distribution substrate: logical-axis sharding rules, elastic meshes,
+overlapped collectives (dense and compressed-N:M), expert-parallel all-to-all
+dispatch, and pipeline parallelism.
+
+The guiding invariant mirrors the paper's vindexmac property at cluster
+scale: whenever a sparse operand crosses a device boundary it travels in the
+*compressed* representation (values + few-bit in-block indices) and is
+decompressed locally at the consumer — never shipped dense.
+"""
+
+from repro.dist.api import (DEFAULT_RULES, MULTIPOD_RULES, axis_rules,
+                            constrain, logical_to_pspec, make_shardings)
+from repro.dist.elastic import choose_mesh, degraded_meshes
+
+__all__ = [
+    "DEFAULT_RULES",
+    "MULTIPOD_RULES",
+    "axis_rules",
+    "constrain",
+    "logical_to_pspec",
+    "make_shardings",
+    "choose_mesh",
+    "degraded_meshes",
+]

@@ -1,0 +1,194 @@
+"""Logical-axis sharding: rules, context, constraints, NamedShardings.
+
+Model code annotates tensors with *logical* axis names ("act_batch", "tp",
+"fsdp", ...); a rule table maps each logical name to a tuple of physical mesh
+axes.  Keeping the mapping in one table means a layout policy change (e.g.
+TP-only serving, full-DP training, adding a cross-pod axis) is a rule edit,
+not a model edit — see launch/dryrun.py for the policies that exercise this.
+
+Resolution applies two safety passes:
+
+  * axis-reuse dedupe — a mesh axis may shard at most one dimension of a
+    tensor; later logical names silently lose axes already claimed (seq and
+    heads both want "model"; whichever is named first wins);
+  * divisibility — when the tensor shape is known, a mesh axis that does not
+    evenly divide its dimension is dropped (GSPMD would otherwise pad or the
+    sharding would be rejected; dropping degrades to replication, which is
+    always correct).
+"""
+
+from __future__ import annotations
+
+import threading
+from contextlib import contextmanager
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+# ----------------------------------------------------------------- rule tables
+#
+# Values are tuples of physical mesh axis names (empty/None = replicated).
+# The launcher mutates copies of these (dict(DEFAULT_RULES)) per layout
+# policy, and iterates rule values ("for ax in rules['act_batch']"), so every
+# value must be an actual tuple, never a bare string.
+
+DEFAULT_RULES: Dict[str, Optional[Tuple[str, ...]]] = {
+    # weight axes
+    "tp": ("model",),          # tensor-parallel (output-feature) axis
+    "fsdp": ("data",),         # fully-sharded weight axis (gathered on use)
+    "ep": ("data",),           # stacked expert axis of MoE weights
+    # activation axes
+    "act_batch": ("data",),
+    "act_seq": None,           # sequence replicated by default
+    "act_seq_sp": ("model",),  # sequence-parallel regions borrow the TP axis
+    "act_heads": ("model",),
+    "act_vocab": ("model",),
+    "act_ep": ("data",),       # expert-capacity buffers follow the expert axis
+}
+
+# Multi-pod: the extra leading "pod" axis carries cross-pod data parallelism.
+# Weights stay sharded within a pod (fsdp over "data") and are replicated
+# across pods; only the (optionally compressed) gradient all-reduce crosses
+# the pod boundary.
+MULTIPOD_RULES: Dict[str, Optional[Tuple[str, ...]]] = {
+    **DEFAULT_RULES,
+    "act_batch": ("pod", "data"),
+}
+
+
+def default_rules_for(mesh) -> Dict[str, Optional[Tuple[str, ...]]]:
+    return MULTIPOD_RULES if "pod" in mesh.axis_names else DEFAULT_RULES
+
+
+# ----------------------------------------------------------------- resolution
+
+def _rule_axes(name: Optional[str], rules: Dict[str, Any]) -> Tuple[str, ...]:
+    """Physical axes for one logical name (tolerates str/None rule values)."""
+    if name is None:
+        return ()
+    axes = rules.get(name)
+    if axes is None:
+        return ()
+    if isinstance(axes, str):
+        return (axes,)
+    return tuple(axes)
+
+
+def logical_to_pspec(spec: Sequence[Optional[str]], rules: Dict[str, Any],
+                     mesh=None, shape: Optional[Sequence[int]] = None) -> P:
+    """Logical spec tuple -> PartitionSpec, with dedupe and divisibility.
+
+    mesh (optional) filters out axes the mesh doesn't have and supplies axis
+    sizes for the divisibility check; shape (optional) enables it.
+    """
+    used: set = set()
+    entries = []
+    for i, name in enumerate(spec):
+        kept = []
+        shards = 1
+        for ax in _rule_axes(name, rules):
+            if ax in used:
+                continue                        # axis-reuse dedupe
+            if mesh is not None and ax not in mesh.shape:
+                continue
+            if shape is not None and mesh is not None and i < len(shape):
+                if shape[i] % (shards * mesh.shape[ax]) != 0:
+                    continue                    # non-dividing axis -> dropped
+            kept.append(ax)
+            used.add(ax)
+            if mesh is not None:
+                shards *= mesh.shape[ax]
+        if not kept:
+            entries.append(None)
+        elif len(kept) == 1:
+            entries.append(kept[0])             # P("data"), not P(("data",))
+        else:
+            entries.append(tuple(kept))
+    while entries and entries[-1] is None:   # canonical form: no trailing None
+        entries.pop()
+    return P(*entries)
+
+
+# -------------------------------------------------------------------- context
+
+class _Active(threading.local):
+    def __init__(self):
+        self.mesh = None
+        self.rules = None
+
+
+_active = _Active()
+
+
+@contextmanager
+def axis_rules(mesh, rules: Optional[Dict[str, Any]] = None):
+    """Activate (mesh, rules) for constrain()/make_shardings() in this thread.
+
+    rules defaults to DEFAULT_RULES, or MULTIPOD_RULES when the mesh has a
+    "pod" axis.  Nestable; the previous binding is restored on exit.
+    """
+    prev = (_active.mesh, _active.rules)
+    _active.mesh = mesh
+    _active.rules = dict(rules if rules is not None else default_rules_for(mesh))
+    try:
+        yield mesh
+    finally:
+        _active.mesh, _active.rules = prev
+
+
+def current_mesh():
+    return _active.mesh
+
+
+def current_rules():
+    return _active.rules
+
+
+# ---------------------------------------------------------------- constraints
+
+def constrain(x: jax.Array, *names: Optional[str]) -> jax.Array:
+    """Pin x's sharding to the resolved logical spec (no-op outside
+    axis_rules, so single-host code paths need no mesh plumbing)."""
+    mesh = _active.mesh
+    if mesh is None:
+        return x
+    spec = logical_to_pspec(names, _active.rules, mesh=mesh, shape=x.shape)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def _is_spec_leaf(leaf) -> bool:
+    return leaf is None or (
+        isinstance(leaf, tuple)
+        and all(e is None or isinstance(e, str) for e in leaf))
+
+
+def make_shardings(specs, mesh=None, rules: Optional[Dict[str, Any]] = None,
+                   shapes_tree=None):
+    """Logical-spec pytree -> NamedSharding pytree.
+
+    specs=None (or a None leaf) means fully replicated.  shapes_tree, when
+    given (arrays or ShapeDtypeStructs, same structure), turns on the
+    divisibility pass so uneven dimensions degrade to replication instead of
+    producing an invalid sharding.
+    """
+    mesh = mesh if mesh is not None else _active.mesh
+    if mesh is None:
+        raise ValueError("make_shardings needs a mesh (argument or active "
+                         "axis_rules context)")
+    if rules is None:
+        rules = _active.rules if _active.rules is not None \
+            else default_rules_for(mesh)
+
+    def one(spec, shape=None):
+        if spec is None:
+            return NamedSharding(mesh, P())
+        return NamedSharding(
+            mesh, logical_to_pspec(spec, rules, mesh=mesh, shape=shape))
+
+    if specs is None:
+        return NamedSharding(mesh, P())
+    if shapes_tree is None:
+        return jax.tree.map(one, specs, is_leaf=_is_spec_leaf)
+    return jax.tree.map(lambda s, x: one(s, tuple(x.shape)),
+                        specs, shapes_tree, is_leaf=_is_spec_leaf)

@@ -1,0 +1,92 @@
+"""Expert-parallel MoE dispatch over all-to-all.
+
+Each device owns E/ndev experts and T/ndev tokens.  Dispatch routes every
+token's top-K copies to the devices owning the chosen experts through a
+single all-to-all of a fixed-capacity buffer (no all-gather of the token
+stream — asserted on the compiled HLO by tests/test_moe_a2a.py), the expert
+FFN runs on local experts only, and a second all-to-all returns results to
+the token's home device for the gate-weighted combine.
+
+Buffer layout: sbuf[d, p] is the p-th token copy this device sends to device
+d; all-to-all preserves (sender, slot) addressing, so the combine can gather
+results back by the same (dest, slot) pairs it scattered with — no index
+metadata round-trip beyond the local expert id.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def moe_a2a_local(x: jax.Array, router: jax.Array, wg: jax.Array,
+                  wu: jax.Array, wd: jax.Array, axis_name: str,
+                  n_experts: int, top_k: int, *, cap_per_pair: int
+                  ) -> jax.Array:
+    """Per-device shard of the expert-parallel MoE layer.
+
+    Operands (inside shard_map over ``axis_name``, size ndev):
+      x:      [Tl, D]           local tokens
+      router: [E, D]            replicated routing weights
+      wg/wu:  [E/ndev, DFF, D]  local experts' gate/up projections
+      wd:     [E/ndev, D, DFF]  local experts' down projection
+    Returns y: [Tl, D].
+
+    cap_per_pair bounds the token copies any device sends to any other
+    device; copies past capacity are dropped (their gate weight is lost,
+    standard capacity-dropping semantics).
+    """
+    ndev = lax.psum(1, axis_name)
+    e_local = n_experts // ndev
+    tl, d = x.shape
+    cap = cap_per_pair
+
+    # ---- route (same math as the dense reference, on local tokens) ------
+    logits = x.astype(jnp.float32) @ router.T.astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, ids = lax.top_k(probs, top_k)                    # [Tl, K]
+    gate = gate / gate.sum(-1, keepdims=True)
+
+    # ---- scatter token copies into the per-destination send buffer ------
+    ids_f = ids.reshape(-1)                                # [Tl*K]
+    gate_f = gate.reshape(-1)
+    tok_f = jnp.repeat(jnp.arange(tl, dtype=jnp.int32), top_k)
+    dest_f = ids_f // e_local
+    elid_f = ids_f % e_local
+    # slot of copy j within its destination = # earlier copies to same dest
+    onehot = jax.nn.one_hot(dest_f, ndev, dtype=jnp.int32)  # [Tl*K, ndev]
+    pos_f = jnp.take_along_axis(jnp.cumsum(onehot, axis=0) - onehot,
+                                dest_f[:, None], axis=1)[:, 0]
+    keep = pos_f < cap
+
+    x_f = x[tok_f]                                         # [Tl*K, D]
+    sbuf = jnp.zeros((ndev, cap, d), x.dtype).at[dest_f, pos_f].set(
+        jnp.where(keep[:, None], x_f, 0), mode="drop")
+    ebuf = jnp.full((ndev, cap), -1, jnp.int32).at[dest_f, pos_f].set(
+        jnp.where(keep, elid_f, -1), mode="drop")
+
+    # ---- dispatch: rbuf[s, p] = slot p sent by device s ------------------
+    rbuf = lax.all_to_all(sbuf, axis_name, 0, 0)           # [ndev, cap, D]
+    relid = lax.all_to_all(ebuf, axis_name, 0, 0)          # [ndev, cap]
+
+    # ---- local expert FFN (silu-gated) on every received copy -----------
+    xt = rbuf.reshape(ndev * cap, d)
+    el = relid.reshape(ndev * cap)
+    g = jnp.einsum("efd,td->tef", wg, xt,
+                   preferred_element_type=jnp.float32)
+    u = jnp.einsum("efd,td->tef", wu, xt,
+                   preferred_element_type=jnp.float32)
+    h = jax.nn.silu(g) * u                                 # [T', El, DFF]
+    yall = jnp.einsum("edf,tef->ted", wd.astype(jnp.float32), h)
+    sel = jax.nn.one_hot(el, e_local, dtype=yall.dtype)    # -1 -> all-zero row
+    y_tok = jnp.einsum("ted,te->td", yall, sel)
+
+    # ---- return trip + gate-weighted combine at the token's home --------
+    back = lax.all_to_all(y_tok.reshape(ndev, cap, d).astype(x.dtype),
+                          axis_name, 0, 0)                 # [ndev, cap, D]
+    contrib = back[dest_f, jnp.minimum(pos_f, cap - 1)]    # [Tl*K, D]
+    contrib = jnp.where(keep[:, None], contrib, 0)
+    y = jnp.zeros((tl, d), jnp.float32).at[tok_f].add(
+        gate_f[:, None] * contrib.astype(jnp.float32))
+    return y.astype(x.dtype)

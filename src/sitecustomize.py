@@ -1,0 +1,41 @@
+"""Interpreter-startup hook for ``PYTHONPATH=src`` runs.
+
+Python's ``site`` module imports ``sitecustomize`` from sys.path at startup,
+so every process launched with this repo's ``src`` on PYTHONPATH — including
+the multi-device subprocess tests — gets the jax forward-compat shims
+(``jax.shard_map`` / ``check_vma=``) installed before any test code runs.
+See repro/_compat.py for what is patched and why.
+"""
+
+try:
+    from repro._compat import install as _install_jax_compat
+except Exception:  # pragma: no cover - never break interpreter startup
+    pass
+else:
+    _install_jax_compat()
+
+
+def _chain_next_sitecustomize():
+    """Run the environment's own sitecustomize (conda/distro hooks), which
+    this file shadows by being first on sys.path."""
+    import importlib.util
+    import os
+    import sys
+    here = os.path.dirname(os.path.abspath(__file__))
+    for p in sys.path:
+        d = os.path.abspath(p or ".")
+        if d == here:
+            continue
+        f = os.path.join(d, "sitecustomize.py")
+        if os.path.isfile(f):
+            spec = importlib.util.spec_from_file_location(
+                "_shadowed_sitecustomize", f)
+            mod = importlib.util.module_from_spec(spec)
+            spec.loader.exec_module(mod)
+            return
+
+
+try:
+    _chain_next_sitecustomize()
+except Exception:  # pragma: no cover - never break interpreter startup
+    pass

@@ -1,23 +1,10 @@
 """Overlapped collective matmul vs dense reference (subprocess, 4 devices)."""
 
-import json
-import os
-import subprocess
-import sys
-
-import pytest
-
-SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+from conftest import run_child
 
 
 def _run(code: str, devices: int = 4) -> dict:
-    env = dict(os.environ,
-               XLA_FLAGS=f"--xla_force_host_platform_device_count={devices}",
-               PYTHONPATH=SRC)
-    res = subprocess.run([sys.executable, "-c", code], capture_output=True,
-                         text=True, env=env, timeout=420)
-    assert res.returncode == 0, res.stderr[-3000:]
-    return json.loads(res.stdout.strip().splitlines()[-1])
+    return run_child(code, devices=devices)
 
 
 def test_collective_matmul_ag():

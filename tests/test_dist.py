@@ -2,31 +2,19 @@
 compressed psum, pipeline parallelism, elastic meshes.  Multi-device paths run
 in subprocesses (host device count must be set before jax init)."""
 
-import json
-import os
-import subprocess
-import sys
-
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+from conftest import run_child
 
 from repro.dist.api import (DEFAULT_RULES, MULTIPOD_RULES, axis_rules,
                             logical_to_pspec, make_shardings)
 from repro.dist.elastic import degraded_meshes
 
-SRC = os.path.join(os.path.dirname(__file__), "..", "src")
-
 
 def _run_child(code: str, devices: int = 8) -> dict:
-    env = dict(os.environ,
-               XLA_FLAGS=f"--xla_force_host_platform_device_count={devices}",
-               PYTHONPATH=SRC)
-    res = subprocess.run([sys.executable, "-c", code], capture_output=True,
-                         text=True, env=env, timeout=300)
-    assert res.returncode == 0, res.stderr[-3000:]
-    return json.loads(res.stdout.strip().splitlines()[-1])
+    return run_child(code, devices=devices, timeout=300)
 
 
 def test_logical_to_pspec():

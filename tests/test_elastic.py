@@ -1,12 +1,7 @@
 """Elastic scaling: a checkpoint written under mesh A restores and continues
 training under mesh B (the node-failure recovery contract)."""
 
-import json
-import os
-import subprocess
-import sys
-
-SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+from conftest import run_child
 
 _CODE = r"""
 import json, sys
@@ -50,14 +45,7 @@ with axis_rules(mesh):
 
 
 def _run(phase, ckpt, ndev_data, devices):
-    env = dict(os.environ,
-               XLA_FLAGS=f"--xla_force_host_platform_device_count={devices}",
-               PYTHONPATH=SRC)
-    res = subprocess.run([sys.executable, "-c", _CODE, phase, ckpt,
-                          str(ndev_data)], capture_output=True, text=True,
-                         env=env, timeout=420)
-    assert res.returncode == 0, res.stderr[-3000:]
-    return json.loads(res.stdout.strip().splitlines()[-1])
+    return run_child(_CODE, devices=devices, argv=(phase, ckpt, ndev_data))
 
 
 def test_restore_under_smaller_mesh(tmp_path):

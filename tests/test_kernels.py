@@ -115,6 +115,48 @@ def test_packed_index_kernel_matches_ref(nm):
                                rtol=1e-4, atol=1e-4)
 
 
+def test_unpack_indices_tile_roundtrip_2bit_words():
+    """M=4 -> 2-bit indices, 16 per uint32 word: the in-VMEM unpack must be
+    the exact inverse of the storage layer's pack_indices."""
+    from repro.core.sparsity import pack_indices
+    from repro.kernels.nm_spmm import _unpack_indices_tile
+    n, m = 2, 4
+    w = jax.random.normal(jax.random.PRNGKey(9), (16, 128))
+    sp = compress(w, n, m)                    # nnz = 64 = 4 full words/row
+    pk = pack_indices(sp.indices, m)
+    out = _unpack_indices_tile(pk, n, m, sp.nnz_per_row)
+    assert out.dtype == jnp.int32
+    np.testing.assert_array_equal(np.asarray(out),
+                                  np.asarray(sp.indices, np.int32))
+
+
+def test_unpack_indices_tile_roundtrip_3bit_words():
+    """M=8 -> 3-bit indices, 10 per word: a non-power-of-two slot count
+    exercises the slot%per_word addressing, including a ragged final word."""
+    from repro.core.sparsity import pack_indices
+    from repro.kernels.nm_spmm import _unpack_indices_tile
+    n, m = 2, 8
+    for k in (80, 64):                        # nnz = 20 (full) / 16 (ragged)
+        w = jax.random.normal(jax.random.PRNGKey(10), (12, k))
+        sp = compress(w, n, m)
+        pk = pack_indices(sp.indices, m)
+        out = _unpack_indices_tile(pk, n, m, sp.nnz_per_row)
+        np.testing.assert_array_equal(np.asarray(out),
+                                      np.asarray(sp.indices, np.int32))
+
+
+def test_packed_rejects_unaligned_block():
+    """bk whose per-block nnz is not a whole number of packed words must be
+    rejected up front (the kernel tile could not start word-aligned)."""
+    n, m = 2, 4                               # 2-bit indices, 16 per word
+    w = jax.random.normal(jax.random.PRNGKey(11), (32, 48))
+    x = jax.random.normal(jax.random.PRNGKey(12), (8, 48))
+    sp = compress(w, n, m)
+    with pytest.raises(ValueError, match="not a multiple"):
+        kops.nm_xwt(x, sp.values, sp.indices, n, m, block=(8, 32, 24),
+                    interpret=True, packed=True)   # bnnz = 12, per_word = 16
+
+
 def test_traffic_model_sparse_beats_dense():
     from repro.kernels.ops import traffic_mm, traffic_spmv
     s = traffic_mm(512, 1024, 4096, 2, 4, sparse=True)

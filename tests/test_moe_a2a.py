@@ -1,12 +1,7 @@
 """Expert-parallel all-to-all MoE dispatch vs the dense per-token reference
 (subprocess, 4 devices)."""
 
-import json
-import os
-import subprocess
-import sys
-
-SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+from conftest import run_child
 
 
 def test_moe_a2a_matches_reference():
@@ -57,13 +52,7 @@ hlo = jax.jit(shard_map(
 print(json.dumps({"err": err, "a2a": hlo.count(" all-to-all("),
                   "gathers": hlo.count(" all-gather(")}))
 """
-    env = dict(os.environ,
-               XLA_FLAGS="--xla_force_host_platform_device_count=4",
-               PYTHONPATH=SRC)
-    res = subprocess.run([sys.executable, "-c", code], capture_output=True,
-                         text=True, env=env, timeout=420)
-    assert res.returncode == 0, res.stderr[-3000:]
-    out = json.loads(res.stdout.strip().splitlines()[-1])
+    out = run_child(code, devices=4)
     assert out["err"] < 1e-3, out
     assert out["a2a"] >= 2, out          # dispatch + return trip
     assert out["gathers"] == 0, out      # no token-buffer replication

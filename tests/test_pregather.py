@@ -1,14 +1,8 @@
 """pregather-FSDP accumulation (§Perf iteration): numerically identical to
 the standard path; collective volume independent of accumulation depth."""
 
-import json
-import os
-import subprocess
-import sys
-
 import pytest
-
-SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+from conftest import run_child
 
 
 def test_pregather_equivalence_subprocess():
@@ -47,12 +41,6 @@ with axis_rules(mesh):
                      "p0": float(jax.tree.leaves(p)[0].astype(jnp.float32).sum())}
 print(json.dumps(outs))
 """
-    env = dict(os.environ,
-               XLA_FLAGS="--xla_force_host_platform_device_count=8",
-               PYTHONPATH=SRC)
-    res = subprocess.run([sys.executable, "-c", code], capture_output=True,
-                         text=True, env=env, timeout=420)
-    assert res.returncode == 0, res.stderr[-3000:]
-    out = json.loads(res.stdout.strip().splitlines()[-1])
+    out = run_child(code, devices=8)
     assert out["std"]["loss"] == pytest.approx(out["pre"]["loss"], rel=1e-4)
     assert out["std"]["p0"] == pytest.approx(out["pre"]["p0"], rel=1e-3)

@@ -4,7 +4,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                     # minimal env: keep the deterministic
+    from conftest import given, settings, st   # tests, skip the property ones
 
 from repro.core.sparsity import (NMSparse, compress, decompress, nm_mask,
                                  pack_indices, sparsify, storage_bytes,
