@@ -1,134 +1,90 @@
-"""Serving driver: compressed N:M weights, batched prefill + greedy decode.
+"""Serving CLI: thin driver over the ``repro.serve`` subsystem.
 
   PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b --smoke \
-      --batch 4 --prompt-len 32 --gen 16
+      --slots 4 --prompt-len 32 --gen 16 --scheduler continuous
+
+``--scheduler sequential`` runs the fixed-batch oracle loop (the whole batch
+decodes in lockstep until its slowest member finishes); ``continuous`` runs
+the slot-refilling engine.  ``serve`` is kept as the PR-1 API (fixed batch of
+identical requests) for the examples and the integration tests.
 """
 
 from __future__ import annotations
 
 import argparse
 import dataclasses
-import time
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
+import jax
+
 from repro.configs import get_config
-from repro.launch import steps as steps_mod
-from repro.models import decode_step, init_caches, init_model, prefill
+from repro.models import init_model
+from repro.serve import (ServeEngine, serve_fixed_batch, serve_sequential,
+                         synthetic_trace)
+from repro.serve.cache import seed_decode_caches as _seed_caches  # compat
 
 
-def serve(arch: str, smoke: bool, batch: int, prompt_len: int, gen: int,
-          seed: int = 0, impl: str = "xla"):
+def _load(arch: str, smoke: bool, impl: str, seed: int = 0):
     cfg = get_config(arch, smoke=smoke)
     cfg = cfg.replace(sparsity=dataclasses.replace(
         cfg.sparsity, mode="compressed", impl=impl))
     params, _ = init_model(jax.random.PRNGKey(seed), cfg)
-
-    rng = np.random.default_rng(seed)
-    batch_in = {"tokens": jnp.asarray(
-        rng.integers(0, cfg.vocab, (batch, prompt_len)), jnp.int32)}
-    if cfg.input_mode == "embeds":
-        batch_in = {"embeds": jnp.asarray(
-            rng.standard_normal((batch, prompt_len, cfg.d_model)), jnp.float32)}
-    if cfg.family == "audio":
-        batch_in["enc_embeds"] = jnp.asarray(
-            rng.standard_normal((batch, cfg.enc_seq, cfg.d_model)), jnp.float32)
-        batch_in.setdefault("tokens", jnp.asarray(
-            rng.integers(0, cfg.vocab, (batch, prompt_len)), jnp.int32))
-
-    max_len = prompt_len + gen
-    t0 = time.time()
-    # prefill produces per-layer caches at prompt length; decode uses a fresh
-    # max_len cache seeded from them (simple pad-copy for the demo).
-    last_logits, pf_caches = jax.jit(
-        lambda p, b: prefill(p, cfg, b))(params, batch_in)
-    t_prefill = time.time() - t0
-
-    caches, _ = init_caches(cfg, batch, max_len)
-    caches = _seed_caches(cfg, caches, pf_caches)
-
-    step = jax.jit(lambda p, c, t, pos: decode_step(p, cfg, c, t, pos))
-    tok = jnp.argmax(last_logits, axis=-1).astype(jnp.int32)
-    out = [tok]
-    t0 = time.time()
-    for i in range(gen - 1):
-        logits, caches = step(params, caches, tok,
-                              jnp.asarray(prompt_len + i, jnp.int32))
-        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        out.append(tok)
-    jax.block_until_ready(tok)
-    t_decode = (time.time() - t0) / max(gen - 1, 1)
-    toks = jnp.stack(out, axis=1)
-    return toks, t_prefill, t_decode
+    return cfg, params
 
 
-def _seed_caches(cfg, caches, pf):
-    """Copy prefill caches (length = prompt) into the decode buffers."""
-    if cfg.family == "dense" or cfg.family == "vlm":
-        if cfg.local_global_period:
-            for kkey in ("local", "global"):
-                for f in ("k", "v"):
-                    src = pf[kkey][f]
-                    dst = caches[kkey][f]
-                    ln = min(src.shape[2], dst.shape[2])
-                    caches[kkey][f] = jax.lax.dynamic_update_slice(
-                        dst, src[:, :, -ln:].astype(dst.dtype), (0, 0, 0, 0, 0))
-        else:
-            for f in ("k", "v"):
-                src, dst = pf[f], caches[f]
-                caches[f] = jax.lax.dynamic_update_slice(
-                    dst, src.astype(dst.dtype), (0, 0, 0, 0, 0))
-    elif cfg.family == "ssm":
-        caches = pf  # state caches are position-free
-    elif cfg.family == "hybrid":
-        new = dict(caches)
-        new["groups"] = pf["groups"]
-        if "tail" in pf:
-            new["tail"] = pf["tail"]
-        for f in ("k", "v"):
-            src, dst = pf["attn"][f], caches["attn"][f]
-            ln = min(src.shape[2], dst.shape[2])
-            new["attn"][f] = jax.lax.dynamic_update_slice(
-                dst, src[:, :, -ln:].astype(dst.dtype), (0, 0, 0, 0, 0))
-        caches = new
-    elif cfg.family == "moe":
-        nd = cfg.first_dense_layers
-        parts = []
-        if nd:
-            parts.append(pf["dense"])
-        parts.append(pf["moe"])
-        merged = jax.tree.map(lambda *xs: jnp.concatenate(xs), *parts) \
-            if len(parts) > 1 else parts[0]
-        for f in list(caches.keys()):
-            src, dst = merged[f], caches[f]
-            caches[f] = jax.lax.dynamic_update_slice(
-                dst, src.astype(dst.dtype), (0,) * dst.ndim)
-    elif cfg.family == "audio":
-        for f in ("k", "v"):
-            src, dst = pf["self"][f], caches["self"][f]
-            caches["self"][f] = jax.lax.dynamic_update_slice(
-                dst, src.astype(dst.dtype), (0, 0, 0, 0, 0))
-        caches["cross_k"] = pf["cross_k"].astype(caches["cross_k"].dtype)
-        caches["cross_v"] = pf["cross_v"].astype(caches["cross_v"].dtype)
-    return caches
+def serve(arch: str, smoke: bool, batch: int, prompt_len: int, gen: int,
+          seed: int = 0, impl: str = "xla"):
+    """PR-1 compatible fixed-batch serve: returns (tokens [B, gen],
+    t_prefill_seconds, t_decode_seconds_per_token)."""
+    cfg, params = _load(arch, smoke, impl, seed)
+    reqs = synthetic_trace(cfg, n_requests=batch, prompt_len=prompt_len,
+                           gen_lens=[gen], seed=seed)
+    results, stats = serve_fixed_batch(params, cfg, reqs)
+    toks = np.stack([results[r.rid].tokens for r in reqs])
+    return toks, stats["t_prefill"], stats["t_per_decode"]
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
     ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--scheduler", default="sequential",
+                    choices=["sequential", "continuous"])
+    ap.add_argument("--slots", "--batch", dest="slots", type=int, default=4)
+    ap.add_argument("--requests", type=int, default=0,
+                    help="trace length (default: one batch of --slots)")
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--gen-mix", default="",
+                    help="comma list of gen budgets cycled over the trace")
+    ap.add_argument("--arrival-every", type=int, default=0)
     ap.add_argument("--impl", default="xla")
     args = ap.parse_args()
-    toks, tp, td = serve(args.arch, args.smoke, args.batch, args.prompt_len,
-                         args.gen, impl=args.impl)
-    print(f"generated {toks.shape}; prefill {tp*1e3:.1f} ms, "
-          f"decode {td*1e3:.2f} ms/token")
-    print("sample:", np.asarray(toks[0][:12]))
+
+    cfg, params = _load(args.arch, args.smoke, args.impl)
+    gen_lens = ([int(g) for g in args.gen_mix.split(",")] if args.gen_mix
+                else [args.gen])
+    n_req = args.requests or args.slots
+    reqs = synthetic_trace(cfg, n_requests=n_req, prompt_len=args.prompt_len,
+                           gen_lens=gen_lens, arrival_every=args.arrival_every)
+    max_len = args.prompt_len + max(gen_lens)
+
+    if args.scheduler == "continuous":
+        eng = ServeEngine(params, cfg, n_slots=args.slots, max_len=max_len)
+        results = eng.run(reqs)
+        st = eng.stats()
+        print(f"continuous: {int(st['tokens'])} tokens in "
+              f"{int(st['decode_steps'])} decode steps, "
+              f"occupancy {st['occupancy']:.2f}")
+    else:
+        results, stats = serve_sequential(params, cfg, reqs, args.slots,
+                                          max_len=max_len)
+        toks = sum(len(r.tokens) for r in results.values())
+        print(f"sequential: {toks} tokens in "
+              f"{int(stats['decode_steps'])} decode steps")
+    rid0 = min(results)
+    print("sample:", results[rid0].tokens[:12].tolist())
 
 
 if __name__ == "__main__":

@@ -145,10 +145,15 @@ def gqa_apply(p: Params, x: jax.Array, cfg: ArchConfig, *,
               cache_pos: Optional[jax.Array] = None,
               return_kv: bool = False):
     """x [B, S, d].  Training/prefill when cache is None (or return_kv),
-    single-token decode when cache is given (x [B, 1, d], cache_pos scalar)."""
+    single-token decode when cache is given (x [B, 1, d]).  cache_pos is a
+    scalar (whole batch at one position) or an int32 [B] vector of per-slot
+    positions (continuous batching: every batch row is an independent request
+    at its own depth)."""
     b, s, d = x.shape
     h, kv, hd = cfg.n_heads, cfg.n_kv, cfg.hd()
     sp = cfg.sparsity
+    if jnp.ndim(positions) == 1:
+        positions = positions[:, None]      # per-slot decode: [B] -> [B, 1]
 
     q = sp_linear_apply(p["wq"], x, sp).reshape(b, s, h, hd)
     k = sp_linear_apply(p["wk"], x, sp).reshape(b, s, kv, hd)
@@ -179,22 +184,31 @@ def gqa_apply(p: Params, x: jax.Array, cfg: ArchConfig, *,
         # append-at-pos cache, so one code path serves both.
         length = cache["k"].shape[1]
         slot = cache_pos % length
-        ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype),
-                                          (0, slot, 0, 0))
-        cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype),
-                                          (0, slot, 0, 0))
+        if jnp.ndim(cache_pos):
+            # per-slot positions: row r writes at its own (slot[r]) offset
+            bidx = jnp.arange(b)
+            ck = cache["k"].at[bidx, slot].set(k[:, 0].astype(cache["k"].dtype))
+            cv = cache["v"].at[bidx, slot].set(v[:, 0].astype(cache["v"].dtype))
+        else:
+            ck = jax.lax.dynamic_update_slice(cache["k"],
+                                              k.astype(cache["k"].dtype),
+                                              (0, slot, 0, 0))
+            cv = jax.lax.dynamic_update_slice(cache["v"],
+                                              v.astype(cache["v"].dtype),
+                                              (0, slot, 0, 0))
         new_kv = {"k": ck, "v": cv}
         g = h // kv
         qg = q.reshape(b, kv, g, hd)
         sc = jnp.einsum("bhgd,blhd->bhgl", qg.astype(jnp.float32),
                         ck.astype(jnp.float32)) * hd ** -0.5
         sc = softcap(sc, cfg.softcap_attn)
-        idx = jnp.arange(length)
-        abs_pos = cache_pos - jnp.mod(cache_pos - idx, length)
+        idx = jnp.arange(length)[None, :]
+        posb = jnp.reshape(cache_pos, (-1, 1))          # [B, 1] or [1, 1]
+        abs_pos = posb - jnp.mod(posb - idx, length)
         valid = abs_pos >= 0
         if window is not None:
-            valid &= abs_pos > cache_pos - window
-        sc = jnp.where(valid[None, None, None, :], sc, _NEG)
+            valid &= abs_pos > posb - window
+        sc = jnp.where(valid[:, None, None, :], sc, _NEG)
         pr = jax.nn.softmax(sc, axis=-1)
         o = jnp.einsum("bhgl,blhd->bhgd", pr, cv.astype(jnp.float32))
         o = o.reshape(b, 1, h, hd).astype(x.dtype)
@@ -253,6 +267,8 @@ def mla_apply(p: Params, x: jax.Array, cfg: ArchConfig, *,
     b, s, d = x.shape
     h, nd, rd, vd = cfg.n_heads, cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
     sp = cfg.sparsity
+    if jnp.ndim(positions) == 1:
+        positions = positions[:, None]      # per-slot decode: [B] -> [B, 1]
     qn, qpe, ckv, kpe = _mla_qkv(p, x, cfg, positions)
     scale = (nd + rd) ** -0.5
 
@@ -270,10 +286,18 @@ def mla_apply(p: Params, x: jax.Array, cfg: ArchConfig, *,
     else:
         # absorbed decode: scores/outputs computed in the latent space —
         # the cache stays [kv_lora + rope] per token (MLA's memory win).
-        cc = jax.lax.dynamic_update_slice(
-            cache["ckv"], ckv.astype(cache["ckv"].dtype), (0, cache_pos, 0))
-        cp = jax.lax.dynamic_update_slice(
-            cache["kpe"], kpe.astype(cache["kpe"].dtype), (0, cache_pos, 0))
+        # cache_pos: scalar, or [B] per-slot positions (continuous batching).
+        if jnp.ndim(cache_pos):
+            bidx = jnp.arange(b)
+            cc = cache["ckv"].at[bidx, cache_pos].set(
+                ckv[:, 0].astype(cache["ckv"].dtype))
+            cp = cache["kpe"].at[bidx, cache_pos].set(
+                kpe[:, 0].astype(cache["kpe"].dtype))
+        else:
+            cc = jax.lax.dynamic_update_slice(
+                cache["ckv"], ckv.astype(cache["ckv"].dtype), (0, cache_pos, 0))
+            cp = jax.lax.dynamic_update_slice(
+                cache["kpe"], kpe.astype(cache["kpe"].dtype), (0, cache_pos, 0))
         new_kv = {"ckv": cc, "kpe": cp}
         # materialize per-head up-proj weights (dense view for the einsum)
         wuk_dense = _dense_weight(p["wuk"], cfg)        # [h*nd, kv_lora]
@@ -286,8 +310,9 @@ def mla_apply(p: Params, x: jax.Array, cfg: ArchConfig, *,
         sc += jnp.einsum("bhd,bld->bhl", qpe[:, 0].astype(jnp.float32),
                          cp.astype(jnp.float32))
         sc *= scale
-        idx = jnp.arange(cc.shape[1])
-        sc = jnp.where((idx <= cache_pos)[None, None, :], sc, _NEG)
+        idx = jnp.arange(cc.shape[1])[None, :]
+        posb = jnp.reshape(cache_pos, (-1, 1))          # [B, 1] or [1, 1]
+        sc = jnp.where((idx <= posb)[:, None, :], sc, _NEG)
         pr = jax.nn.softmax(sc, axis=-1)
         ov = jnp.einsum("bhl,blr->bhr", pr, cc.astype(jnp.float32))
         o = jnp.einsum("bhr,hdr->bhd", ov, wuv3.astype(jnp.float32))

@@ -702,7 +702,14 @@ def init_caches(cfg: ArchConfig, batch: int, max_len: int):
 
 
 def decode_step(p, cfg: ArchConfig, caches, tokens: jax.Array, pos: jax.Array):
-    """One token: tokens [B] int32, pos scalar int32 -> (logits [B, V], caches)."""
+    """One token: tokens [B] int32 -> (logits [B, V], caches).
+
+    pos is either a scalar int32 (the whole batch decodes at one position —
+    the fixed-batch loop) or an int32 [B] vector of per-slot positions (each
+    batch row is an independent request at its own depth — the continuous-
+    batching regime of repro.serve; attention caches then update and mask
+    per row).  SSM/hybrid state caches are position-free, so only the
+    attention paths consume pos."""
     x = embed_apply(p["embed"], tokens[:, None])
     if cfg.scale_embeds:
         x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)

@@ -1,0 +1,51 @@
+"""Continuous-batching serving subsystem for compressed N:M models.
+
+Design
+------
+Serving is organized around a fixed pool of decode **slots** (batch rows of
+one preallocated KV-cache tree) fed by a FCFS request queue:
+
+* ``request``   — ``Request``/``RequestResult`` plus synthetic trace makers.
+  Time is counted in scheduler ticks (one batched decode step per tick), so
+  traces replay deterministically.
+* ``scheduler`` — ``SlotScheduler``: admits queued requests into freed slots
+  the tick after the previous occupant emits its last token (continuous
+  batching), and records slot-occupancy statistics.
+* ``cache``     — the slotted KV-cache pool: ``seed_decode_caches`` copies
+  prefill caches into decode buffers (length-clipped per family), and
+  ``scatter_slot`` writes a batch-1 cache into one pool slot, locating the
+  slot axis structurally so a single admission path covers every family's
+  cache layout (dense, local/global, MLA, ssm, hybrid, moe, audio).
+* ``engine``    — ``ServeEngine``: prefill-on-admission + one batched
+  ``decode_step`` per tick with a per-slot int32 position vector (the
+  attention caches update and mask per batch row).
+* ``sequential``— the fixed-batch oracle: the whole batch decodes in
+  lockstep until its slowest member finishes.  Continuous batching must be
+  token-for-token equivalent to it under matched batch composition; the
+  throughput win is purely from refilling early-finished slots.
+
+Relation to the paper
+---------------------
+Decode is the regime the compressed N:M format is built for: each step
+streams the compressed weights (values at N/M density + ceil(log2 M)-bit
+indices) through a small-batch matvec — ``kernels.nm_spmv``'s vindexmac
+dataflow, where every indirect access stays local to the resident activation
+tile (companion paper arXiv:2311.07241 shows the same dataflow sustains
+decode-shaped matvecs).  The weight stream is re-read once per decode step
+regardless of how many slots do useful work, so slot occupancy is exactly
+the token yield per compressed-weight pass; the scheduler's job is keeping
+that ratio at 1.
+"""
+
+from repro.serve.cache import scatter_slot, seed_decode_caches
+from repro.serve.engine import ServeEngine
+from repro.serve.request import (Request, RequestResult, synthetic_request,
+                                 synthetic_trace)
+from repro.serve.scheduler import SlotScheduler
+from repro.serve.sequential import serve_fixed_batch, serve_sequential
+
+__all__ = [
+    "Request", "RequestResult", "ServeEngine", "SlotScheduler",
+    "scatter_slot", "seed_decode_caches", "serve_fixed_batch",
+    "serve_sequential", "synthetic_request", "synthetic_trace",
+]

@@ -1,0 +1,104 @@
+"""Slotted KV-cache pool plumbing.
+
+Two pieces:
+
+* ``seed_decode_caches`` — copy the per-layer caches emitted by ``prefill``
+  (length = prompt) into decode buffers of length ``max_len``, per model
+  family.  Every attention branch length-clips to ``min(src, dst)`` and keeps
+  the *last* tokens, so a prompt longer than the decode buffer degrades to a
+  truncated-context decode instead of a ``dynamic_update_slice`` shape error.
+
+* ``scatter_slot`` — write a batch-1 cache tree into batch index ``slot`` of
+  an n-slot pool tree.  The slot (batch) axis sits at a different depth per
+  family (stacked attention caches carry it at axis 1, hybrid mamba groups at
+  axis 2, ...), so it is identified structurally: the first axis where the
+  pool leaf's shape differs from the single-request leaf's shape.  This is
+  what lets one admission path serve every cache layout in ``_seed_caches``'
+  family dispatch without per-family scatter code.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def seed_decode_caches(cfg, caches, pf):
+    """Copy prefill caches (length = prompt) into the decode buffers.
+
+    ``caches`` comes from ``init_caches(cfg, batch, max_len)``; ``pf`` from
+    ``prefill`` on the same batch.  Sequence axes are length-clipped to
+    ``min(prompt, max_len)`` keeping the last tokens (the windowed/ring
+    layers already behaved this way; the dense/moe/audio branches now match).
+    """
+    if cfg.family == "dense" or cfg.family == "vlm":
+        if cfg.local_global_period:
+            for kkey in ("local", "global"):
+                for f in ("k", "v"):
+                    src = pf[kkey][f]
+                    dst = caches[kkey][f]
+                    ln = min(src.shape[2], dst.shape[2])
+                    caches[kkey][f] = jax.lax.dynamic_update_slice(
+                        dst, src[:, :, -ln:].astype(dst.dtype), (0, 0, 0, 0, 0))
+        else:
+            for f in ("k", "v"):
+                src, dst = pf[f], caches[f]
+                ln = min(src.shape[2], dst.shape[2])
+                caches[f] = jax.lax.dynamic_update_slice(
+                    dst, src[:, :, -ln:].astype(dst.dtype), (0, 0, 0, 0, 0))
+    elif cfg.family == "ssm":
+        caches = pf  # state caches are position-free
+    elif cfg.family == "hybrid":
+        new = dict(caches)
+        new["groups"] = pf["groups"]
+        if "tail" in pf:
+            new["tail"] = pf["tail"]
+        for f in ("k", "v"):
+            src, dst = pf["attn"][f], caches["attn"][f]
+            ln = min(src.shape[2], dst.shape[2])
+            new["attn"][f] = jax.lax.dynamic_update_slice(
+                dst, src[:, :, -ln:].astype(dst.dtype), (0, 0, 0, 0, 0))
+        caches = new
+    elif cfg.family == "moe":
+        nd = cfg.first_dense_layers
+        parts = []
+        if nd:
+            parts.append(pf["dense"])
+        parts.append(pf["moe"])
+        merged = jax.tree.map(lambda *xs: jnp.concatenate(xs), *parts) \
+            if len(parts) > 1 else parts[0]
+        for f in list(caches.keys()):
+            src, dst = merged[f], caches[f]
+            ln = min(src.shape[2], dst.shape[2])
+            caches[f] = jax.lax.dynamic_update_slice(
+                dst, src[:, :, -ln:].astype(dst.dtype), (0,) * dst.ndim)
+    elif cfg.family == "audio":
+        for f in ("k", "v"):
+            src, dst = pf["self"][f], caches["self"][f]
+            ln = min(src.shape[2], dst.shape[2])
+            caches["self"][f] = jax.lax.dynamic_update_slice(
+                dst, src[:, :, -ln:].astype(dst.dtype), (0, 0, 0, 0, 0))
+        caches["cross_k"] = pf["cross_k"].astype(caches["cross_k"].dtype)
+        caches["cross_v"] = pf["cross_v"].astype(caches["cross_v"].dtype)
+    return caches
+
+
+def scatter_slot(pool, single, slot: int):
+    """Write a batch-1 cache tree into batch index ``slot`` of the pool.
+
+    Per leaf, the slot axis is the first axis where the two shapes differ
+    (both trees come from ``init_caches`` with batch = n_slots vs batch = 1,
+    so every other axis agrees).  With n_slots == 1 the shapes coincide and
+    the single tree simply replaces the pool.
+    """
+    def one(dst, src):
+        if dst.shape == src.shape:
+            return src.astype(dst.dtype)
+        ax = next(i for i, (a, b) in enumerate(zip(dst.shape, src.shape))
+                  if a != b)
+        start = [0] * dst.ndim
+        start[ax] = slot
+        return jax.lax.dynamic_update_slice(dst, src.astype(dst.dtype),
+                                            tuple(start))
+
+    return jax.tree.map(one, pool, single)

@@ -1,0 +1,144 @@
+"""Continuous-batching serve engine over a slotted KV-cache pool.
+
+The engine owns one decode-cache pool of ``n_slots`` batch rows
+(``init_caches(cfg, n_slots, max_len)``) and a per-slot int32 position
+vector.  Serving interleaves two operations:
+
+* **prefill-on-admission** — when the scheduler places a queued request into
+  a freed slot, the engine prefills that request alone (batch 1), seeds a
+  single-slot decode cache from the prefill caches (``seed_decode_caches``),
+  and scatters it into the pool at the slot's batch index
+  (``cache.scatter_slot``).  The request's first token is the argmax of the
+  prefill logits, exactly as in the fixed-batch oracle.
+
+* **batched decode** — one ``decode_step`` per tick over the whole pool with
+  the per-slot position vector (see ``models.transformer.decode_step``:
+  attention caches update and mask per batch row).  Rows whose slot is idle
+  carry stale tokens/positions; their cache writes land in slots that are
+  fully overwritten at the next admission, and batch rows are independent in
+  every model op, so active outputs are unaffected.  (Exception: MoE expert
+  capacity couples rows — with ``capacity_factor`` routing, outputs are only
+  bit-identical to the oracle while batch composition matches, e.g.
+  simultaneous arrivals with equal budgets.)
+
+This is the decode regime the paper's compressed N:M format targets: every
+step is a small-batch matvec against the compressed weight stream
+(``kernels.nm_spmv``'s vindexmac dataflow), so keeping slots full converts
+directly into tokens per weight-stream pass.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import decode_step, init_caches, prefill
+from repro.serve.cache import scatter_slot, seed_decode_caches
+from repro.serve.request import Request, RequestResult
+from repro.serve.scheduler import SlotScheduler
+
+
+@dataclasses.dataclass
+class _SlotState:
+    req: Request
+    tokens: List[int]
+    admitted_at: int
+
+
+class ServeEngine:
+    """Continuous-batching greedy-decode engine (single host, CPU-friendly)."""
+
+    def __init__(self, params, cfg, n_slots: int, max_len: int):
+        self.params = params
+        self.cfg = cfg
+        self.n_slots = n_slots
+        self.max_len = max_len
+        self.scheduler = SlotScheduler(n_slots)
+        self.caches, _ = init_caches(cfg, n_slots, max_len)
+        self.pos = np.zeros(n_slots, np.int32)
+        self.tok = np.zeros(n_slots, np.int32)
+        self.active = np.zeros(n_slots, bool)
+        self.results: Dict[int, RequestResult] = {}
+        self.decode_steps = 0
+        self._slots: Dict[int, _SlotState] = {}
+        # one jit each: decode re-uses a single (pool-shaped) executable;
+        # prefill compiles per distinct prompt length (real engines bucket).
+        self._decode = jax.jit(lambda p, c, t, pos: decode_step(p, cfg, c, t, pos))
+        self._prefill = jax.jit(lambda p, b: prefill(p, cfg, b))
+
+    # --------------------------------------------------------------- frontend
+
+    def submit(self, req: Request) -> None:
+        if req.prompt_len + req.max_new_tokens - 1 > self.max_len:
+            raise ValueError(
+                f"request {req.rid}: prompt {req.prompt_len} + gen "
+                f"{req.max_new_tokens} exceeds pool max_len {self.max_len}")
+        self.scheduler.submit(req)
+
+    # -------------------------------------------------------------- admission
+
+    def _admit(self, slot: int, req: Request, now: int) -> None:
+        batch = {k: jnp.asarray(v)[None] for k, v in req.inputs.items()}
+        logits, pf = self._prefill(self.params, batch)
+        single, _ = init_caches(self.cfg, 1, self.max_len)
+        single = seed_decode_caches(self.cfg, single, pf)
+        self.caches = scatter_slot(self.caches, single, slot)
+        first = int(jnp.argmax(logits[0]))
+        self._slots[slot] = _SlotState(req=req, tokens=[first], admitted_at=now)
+        self.pos[slot] = req.prompt_len
+        self.tok[slot] = first
+        self.active[slot] = True
+        if req.max_new_tokens <= 1:          # satisfied by prefill alone
+            self._retire(slot, now)
+
+    def _retire(self, slot: int, now: int) -> None:
+        st = self._slots.pop(slot)
+        self.results[st.req.rid] = RequestResult(
+            rid=st.req.rid, tokens=np.asarray(st.tokens, np.int32),
+            admitted_at=st.admitted_at, finished_at=now)
+        self.scheduler.release(slot)
+        self.active[slot] = False
+
+    # ----------------------------------------------------------------- decode
+
+    def step(self, now: int) -> None:
+        """One batched decode tick over the pool (per-slot positions)."""
+        logits, self.caches = self._decode(
+            self.params, self.caches, jnp.asarray(self.tok),
+            jnp.asarray(self.pos))
+        nxt = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
+        self.decode_steps += 1
+        for slot in list(self._slots):
+            st = self._slots[slot]
+            st.tokens.append(int(nxt[slot]))
+            self.tok[slot] = nxt[slot]
+            self.pos[slot] += 1
+            if len(st.tokens) >= st.req.max_new_tokens:
+                self._retire(slot, now)
+
+    # -------------------------------------------------------------- main loop
+
+    def run(self, requests: Optional[List[Request]] = None
+            ) -> Dict[int, RequestResult]:
+        """Drive to completion: admit-then-step once per tick."""
+        for r in requests or ():
+            self.submit(r)
+        t = 0
+        while self.scheduler.has_work():
+            for slot, req in self.scheduler.admit(t):
+                self._admit(slot, req, t)
+            if self.active.any():
+                self.scheduler.record_occupancy()
+                self.step(t)
+            t += 1
+        return self.results
+
+    def stats(self) -> Dict[str, float]:
+        toks = sum(len(r.tokens) for r in self.results.values())
+        return {"decode_steps": float(self.decode_steps),
+                "occupancy": self.scheduler.occupancy(),
+                "tokens": float(toks)}

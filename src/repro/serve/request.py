@@ -1,0 +1,82 @@
+"""Request abstraction for the serving subsystem.
+
+A Request carries one *unbatched* prompt in whatever modality the model
+family consumes (``tokens`` [S], ``embeds`` [S, d] for embedding-input
+models, plus ``enc_embeds`` [Se, d] for enc-dec audio models), a generation
+budget, and an arrival tick.  Time is measured in scheduler ticks — one tick
+per batched decode step — so traces are deterministic and replayable.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class Request:
+    """One serving request.
+
+    inputs: unbatched prompt arrays (no leading batch axis).
+    max_new_tokens: total tokens to emit, *including* the first token that
+        falls out of prefill (matching the fixed-batch oracle, which emits
+        argmax(prefill logits) followed by max_new_tokens - 1 decode steps).
+    arrival: scheduler tick at which the request becomes admissible.
+    """
+
+    rid: int
+    inputs: Dict[str, np.ndarray]
+    max_new_tokens: int
+    arrival: int = 0
+
+    @property
+    def prompt_len(self) -> int:
+        if "tokens" in self.inputs:
+            return int(self.inputs["tokens"].shape[0])
+        return int(self.inputs["embeds"].shape[0])
+
+
+@dataclasses.dataclass
+class RequestResult:
+    """Completed request: emitted tokens plus admission/finish ticks."""
+
+    rid: int
+    tokens: np.ndarray           # int32 [max_new_tokens]
+    admitted_at: int = 0
+    finished_at: int = 0
+
+
+def synthetic_request(cfg, rng: np.random.Generator, rid: int,
+                      prompt_len: int, max_new_tokens: int,
+                      arrival: int = 0) -> Request:
+    """Family-shaped random prompt (mirrors the launch.serve input builder)."""
+    inputs: Dict[str, np.ndarray] = {}
+    if cfg.input_mode == "embeds":
+        inputs["embeds"] = rng.standard_normal(
+            (prompt_len, cfg.d_model)).astype(np.float32)
+    else:
+        inputs["tokens"] = rng.integers(
+            0, cfg.vocab, (prompt_len,)).astype(np.int32)
+    if cfg.family == "audio":
+        inputs["enc_embeds"] = rng.standard_normal(
+            (cfg.enc_seq, cfg.d_model)).astype(np.float32)
+        inputs.setdefault("tokens", rng.integers(
+            0, cfg.vocab, (prompt_len,)).astype(np.int32))
+    return Request(rid=rid, inputs=inputs, max_new_tokens=max_new_tokens,
+                   arrival=arrival)
+
+
+def synthetic_trace(cfg, n_requests: int, prompt_len: int,
+                    gen_lens: Sequence[int], seed: int = 0,
+                    arrival_every: int = 0) -> List[Request]:
+    """A mixed-length trace: equal prompt lengths (so the fixed-batch oracle
+    can prefill jointly), generation budgets cycling through ``gen_lens``,
+    and optional staggered arrivals (request i arrives at i * arrival_every).
+    """
+    rng = np.random.default_rng(seed)
+    return [synthetic_request(cfg, rng, rid=i, prompt_len=prompt_len,
+                              max_new_tokens=gen_lens[i % len(gen_lens)],
+                              arrival=i * arrival_every)
+            for i in range(n_requests)]

@@ -1,0 +1,79 @@
+"""Slot-based continuous-batching scheduler (pure bookkeeping, no jax).
+
+The decode batch is a fixed pool of ``n_slots`` slots.  Queued requests are
+admitted FCFS into whichever slots are free; a slot frees the moment its
+request emits its last token, so the next queued request rides the very next
+batched decode step instead of waiting for the whole batch to drain — the
+difference between fixed-batch and continuous scheduling.
+
+The scheduler is deliberately engine-agnostic: it only tracks slot ownership,
+the arrival queue, and occupancy statistics, which makes it unit-testable
+without touching a model.
+"""
+
+from __future__ import annotations
+
+import collections
+from typing import Deque, Dict, List, Optional, Tuple
+
+from repro.serve.request import Request
+
+
+class SlotScheduler:
+    """FCFS admission of queued requests into freed decode slots."""
+
+    def __init__(self, n_slots: int):
+        if n_slots <= 0:
+            raise ValueError(f"need n_slots > 0, got {n_slots}")
+        self.n_slots = n_slots
+        self._free: List[int] = sorted(range(n_slots), reverse=True)
+        self._queue: Deque[Request] = collections.deque()
+        self._active: Dict[int, Request] = {}
+        self._occupancy: List[int] = []      # active-slot count per tick
+
+    # ------------------------------------------------------------- admission
+
+    def submit(self, req: Request) -> None:
+        self._queue.append(req)
+
+    def admit(self, now: int) -> List[Tuple[int, Request]]:
+        """Admit arrived requests into free slots; returns (slot, request)."""
+        admitted: List[Tuple[int, Request]] = []
+        while self._free and self._queue and self._queue[0].arrival <= now:
+            slot = self._free.pop()          # lowest free slot first
+            req = self._queue.popleft()
+            self._active[slot] = req
+            admitted.append((slot, req))
+        return admitted
+
+    def release(self, slot: int) -> None:
+        if slot not in self._active:
+            raise KeyError(f"slot {slot} is not active")
+        del self._active[slot]
+        self._free.append(slot)
+        self._free.sort(reverse=True)
+
+    # ------------------------------------------------------------------ state
+
+    @property
+    def active_slots(self) -> List[int]:
+        return sorted(self._active)
+
+    @property
+    def pending(self) -> int:
+        return len(self._queue)
+
+    def has_work(self) -> bool:
+        return bool(self._queue or self._active)
+
+    # ------------------------------------------------------------- statistics
+
+    def record_occupancy(self) -> None:
+        """Sample the active-slot count (call once per decode tick)."""
+        self._occupancy.append(len(self._active))
+
+    def occupancy(self) -> float:
+        """Mean fraction of slots doing useful work per decode step."""
+        if not self._occupancy:
+            return 0.0
+        return sum(self._occupancy) / (len(self._occupancy) * self.n_slots)

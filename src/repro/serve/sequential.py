@@ -1,0 +1,93 @@
+"""Fixed-batch (sequential) serving loop — the oracle.
+
+This is the PR-1 ``launch.serve`` decode loop, lifted out of the CLI and
+parameterized over a request list: prefill one batch jointly, then greedy-
+decode every slot in lockstep (scalar position) until the *longest* request
+in the batch finishes.  Requests that finish early burn their slot — which is
+exactly the inefficiency the continuous engine removes, and why this loop is
+kept verbatim as the equivalence oracle and throughput baseline.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import decode_step, init_caches, prefill
+from repro.serve.cache import seed_decode_caches
+from repro.serve.request import Request, RequestResult
+
+
+def _stack_inputs(requests: List[Request]) -> Dict[str, jnp.ndarray]:
+    keys = requests[0].inputs.keys()
+    return {k: jnp.asarray(np.stack([r.inputs[k] for r in requests]))
+            for k in keys}
+
+
+def serve_fixed_batch(params, cfg, requests: List[Request],
+                      max_len: Optional[int] = None
+                      ) -> Tuple[Dict[int, RequestResult], Dict[str, float]]:
+    """Decode one fixed batch jointly; returns (results by rid, stats).
+
+    All prompts must share one length (joint prefill is rectangular).  The
+    batch runs ``max(max_new_tokens) - 1`` decode steps; each request's
+    output is trimmed to its own budget.
+    """
+    plens = {r.prompt_len for r in requests}
+    assert len(plens) == 1, f"fixed batch needs equal prompt lengths: {plens}"
+    prompt_len = plens.pop()
+    gen = max(r.max_new_tokens for r in requests)
+    max_len = max_len or prompt_len + gen
+    batch = len(requests)
+    batch_in = _stack_inputs(requests)
+
+    t0 = time.time()
+    last_logits, pf_caches = jax.jit(
+        lambda p, b: prefill(p, cfg, b))(params, batch_in)
+    t_prefill = time.time() - t0
+
+    caches, _ = init_caches(cfg, batch, max_len)
+    caches = seed_decode_caches(cfg, caches, pf_caches)
+
+    step = jax.jit(lambda p, c, t, pos: decode_step(p, cfg, c, t, pos))
+    tok = jnp.argmax(last_logits, axis=-1).astype(jnp.int32)
+    out = [tok]
+    t0 = time.time()
+    for i in range(gen - 1):
+        logits, caches = step(params, caches, tok,
+                              jnp.asarray(prompt_len + i, jnp.int32))
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        out.append(tok)
+    jax.block_until_ready(tok)
+    t_decode = (time.time() - t0) / max(gen - 1, 1)
+    toks = np.asarray(jnp.stack(out, axis=1), np.int32)    # [B, gen]
+
+    results = {r.rid: RequestResult(rid=r.rid,
+                                    tokens=toks[i, :r.max_new_tokens],
+                                    finished_at=gen - 1)
+               for i, r in enumerate(requests)}
+    stats = {"decode_steps": float(gen - 1), "t_prefill": t_prefill,
+             "t_per_decode": t_decode}
+    return results, stats
+
+
+def serve_sequential(params, cfg, requests: List[Request], n_slots: int,
+                     max_len: Optional[int] = None
+                     ) -> Tuple[Dict[int, RequestResult], Dict[str, float]]:
+    """FCFS fixed batches of ``n_slots``: each batch runs to its slowest
+    member before the next batch starts (no slot refill)."""
+    order = sorted(requests, key=lambda r: (r.arrival, r.rid))
+    results: Dict[int, RequestResult] = {}
+    steps = 0.0
+    t_prefill = 0.0
+    for i in range(0, len(order), n_slots):
+        res, stats = serve_fixed_batch(params, cfg, order[i:i + n_slots],
+                                       max_len=max_len)
+        results.update(res)
+        steps += stats["decode_steps"]
+        t_prefill += stats["t_prefill"]
+    return results, {"decode_steps": steps, "t_prefill": t_prefill}

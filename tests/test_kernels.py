@@ -157,6 +157,83 @@ def test_packed_rejects_unaligned_block():
                     interpret=True, packed=True)   # bnnz = 12, per_word = 16
 
 
+# ---------------------------------------------------------------------------
+# Differential net: every kernel orientation vs the jnp oracle, across the
+# paper's N:M patterns, both index streams (int8 and the bit-packed col_idx
+# words), and bf16/f32 inputs.  nm_xwt consumes packed words natively
+# (unpack-in-VMEM); nm_spmm/nm_spmv take int8, so their packed coverage
+# round-trips the index stream through the storage format first — the kernel
+# then multiplies exactly what the packed words decode to.
+# ---------------------------------------------------------------------------
+
+DIFF_NM = [(1, 4), (2, 4), (2, 8)]
+DIFF_DTYPES = [jnp.float32, jnp.bfloat16]
+
+
+def _storage_roundtrip(indices, m, nnz):
+    from repro.core.sparsity import pack_indices, unpack_indices
+    return unpack_indices(pack_indices(indices, m), m, nnz)
+
+
+def _diff_problem(n, m, o, k, b, dtype, seed):
+    kw = jax.random.split(jax.random.PRNGKey(seed), 2)
+    w = jax.random.normal(kw[0], (o, k), jnp.float32).astype(dtype)
+    x = jax.random.normal(kw[1], (b, k), jnp.float32).astype(dtype)
+    return x, compress(w, n, m)
+
+
+@pytest.mark.parametrize("nm", DIFF_NM)
+@pytest.mark.parametrize("dtype", DIFF_DTYPES)
+@pytest.mark.parametrize("packed", [False, True])
+def test_diff_xwt_kernel(nm, dtype, packed):
+    n, m = nm
+    # m=8 -> 3-bit indices, 10/word: bk=80 keeps every tile word-aligned and
+    # k=160 forces a multi-k-step accumulation through the packed path.
+    o, k, b = (64, 160, 16) if m == 8 else (96, 256, 16)
+    block = (8, 64, 80) if m == 8 else None
+    x, sp = _diff_problem(n, m, o, k, b, dtype, seed=21)
+    y = kops.nm_xwt(x, sp.values, sp.indices, n, m, block=block,
+                    interpret=True, packed=packed)
+    y_ref = kref.nm_xwt_ref(x.astype(jnp.float32),
+                            sp.values.astype(jnp.float32), sp.indices, n, m)
+    np.testing.assert_allclose(np.asarray(y, jnp.float32),
+                               np.asarray(y_ref), **_tol(dtype))
+
+
+@pytest.mark.parametrize("nm", DIFF_NM)
+@pytest.mark.parametrize("dtype", DIFF_DTYPES)
+@pytest.mark.parametrize("idx_stream", ["int8", "packed_roundtrip"])
+def test_diff_spmm_kernel(nm, dtype, idx_stream):
+    n, m = nm
+    r, c, k = 48, 96, 160 if m == 8 else 192
+    kw = jax.random.split(jax.random.PRNGKey(23), 2)
+    a = jax.random.normal(kw[0], (r, k), jnp.float32).astype(dtype)
+    b = jax.random.normal(kw[1], (k, c), jnp.float32).astype(dtype)
+    sp = compress(a, n, m)
+    idx = sp.indices if idx_stream == "int8" else \
+        _storage_roundtrip(sp.indices, m, sp.nnz_per_row)
+    y = kops.nm_spmm(sp.values, idx, b, n, m, interpret=True)
+    y_ref = kref.nm_spmm_ref(sp.values.astype(jnp.float32), idx,
+                             b.astype(jnp.float32), n, m)
+    np.testing.assert_allclose(np.asarray(y, jnp.float32),
+                               np.asarray(y_ref, jnp.float32), **_tol(dtype))
+
+
+@pytest.mark.parametrize("nm", DIFF_NM)
+@pytest.mark.parametrize("dtype", DIFF_DTYPES)
+@pytest.mark.parametrize("mode", ["gather", "onehot"])
+def test_diff_spmv_kernel(nm, dtype, mode):
+    n, m = nm
+    o, k, b = 64, 160 if m == 8 else 256, 4
+    x, sp = _diff_problem(n, m, o, k, b, dtype, seed=25)
+    idx = _storage_roundtrip(sp.indices, m, sp.nnz_per_row)
+    y = kops.nm_spmv(x, sp.values, idx, n, m, mode=mode, interpret=True)
+    y_ref = kref.nm_spmv_ref(x.astype(jnp.float32),
+                             sp.values.astype(jnp.float32), idx, n, m)
+    np.testing.assert_allclose(np.asarray(y, jnp.float32),
+                               np.asarray(y_ref, jnp.float32), **_tol(dtype))
+
+
 def test_traffic_model_sparse_beats_dense():
     from repro.kernels.ops import traffic_mm, traffic_spmv
     s = traffic_mm(512, 1024, 4096, 2, 4, sparse=True)
