@@ -20,7 +20,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.sparse_matmul import (SparsityConfig, masked_matmul, nm_matmul,
-                                      nm_matmul_ste)
+                                      nm_matmul_ste, select_impl)
 from repro.core.sparsity import NMSparse, compress, nm_mask
 
 Params = Dict[str, Any]
@@ -47,10 +47,10 @@ def linear_init(key: jax.Array, in_dim: int, out_dim: int,
 def linear_apply(p: Params, x: jax.Array, cfg: SparsityConfig,
                  in_dim: Optional[int] = None) -> jax.Array:
     in_dim = in_dim if in_dim is not None else x.shape[-1]
-    if "w_vals" in p:  # compressed serving path
+    if "w_vals" in p:  # compressed serving path: impl chosen by shape policy
         out_dim = p["w_vals"].shape[0]
         sp = NMSparse(p["w_vals"], p["w_idx"], cfg.n, cfg.m, (out_dim, in_dim))
-        y = nm_matmul(x, sp, impl=cfg.impl,
+        y = nm_matmul(x, sp, impl=select_impl(cfg, x.shape),
                       gather_compressed=cfg.gather_compressed)
     else:
         w = p["w"]
@@ -62,10 +62,9 @@ def linear_apply(p: Params, x: jax.Array, cfg: SparsityConfig,
             elif cfg.mode == "compressed":
                 # dense params under a compressed policy (not yet converted):
                 # apply the N:M mask so the function matches the compressed
-                # path rather than silently running dense
-                from repro.core.sparsity import sparsify
-                y = jnp.einsum("...k,ok->...o", x, sparsify(w, cfg.n, cfg.m),
-                               preferred_element_type=jnp.float32).astype(x.dtype)
+                # path — same masked-einsum helper as 'fixed', so the dtype
+                # handling (f32 accumulate, cast to x.dtype) cannot diverge
+                y = masked_matmul(x, w, nm_mask(w, cfg.n, cfg.m))
             else:
                 y = jnp.einsum("...k,ok->...o", x, w,
                                preferred_element_type=jnp.float32).astype(x.dtype)

@@ -1,12 +1,19 @@
 """Serving CLI: thin driver over the ``repro.serve`` subsystem.
 
   PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b --smoke \
-      --slots 4 --prompt-len 32 --gen 16 --scheduler continuous
+      --slots 4 --prompt-len 32 --gen 16 --scheduler continuous \
+      --weights compressed
 
 ``--scheduler sequential`` runs the fixed-batch oracle loop (the whole batch
 decodes in lockstep until its slowest member finishes); ``continuous`` runs
-the slot-refilling engine.  ``serve`` is kept as the PR-1 API (fixed batch of
-identical requests) for the examples and the integration tests.
+the slot-refilling engine.  ``--weights compressed`` (the default) serves
+from the compressed N:M pool — the model is packed offline at engine init
+(``models.convert_to_compressed``) and decode streams w_vals + packed
+col_idx through the nm_spmv policy route; ``--weights dense`` serves the
+same weights unconverted (masked-dense forward), emitting identical tokens
+at ~M/N the decode weight traffic.  ``serve`` is kept as the PR-1 API
+(fixed batch of identical requests) for the examples and the integration
+tests.
 """
 
 from __future__ import annotations
@@ -19,16 +26,17 @@ import numpy as np
 import jax
 
 from repro.configs import get_config
-from repro.models import init_model
+from repro.models import convert_to_compressed, init_model
 from repro.serve import (ServeEngine, serve_fixed_batch, serve_sequential,
                          synthetic_trace)
 from repro.serve.cache import seed_decode_caches as _seed_caches  # compat
 
 
-def _load(arch: str, smoke: bool, impl: str, seed: int = 0):
+def _load(arch: str, smoke: bool, impl: str, seed: int = 0,
+          mode: str = "compressed"):
     cfg = get_config(arch, smoke=smoke)
     cfg = cfg.replace(sparsity=dataclasses.replace(
-        cfg.sparsity, mode="compressed", impl=impl))
+        cfg.sparsity, mode=mode, impl=impl))
     params, _ = init_model(jax.random.PRNGKey(seed), cfg)
     return cfg, params
 
@@ -59,10 +67,21 @@ def main() -> None:
     ap.add_argument("--gen-mix", default="",
                     help="comma list of gen budgets cycled over the trace")
     ap.add_argument("--arrival-every", type=int, default=0)
-    ap.add_argument("--impl", default="xla")
+    ap.add_argument("--impl", default="auto",
+                    help="sparse-matmul impl ('auto' engages the decode "
+                         "routing policy: spmv for decode shapes, spmm tiles "
+                         "for prefill)")
+    ap.add_argument("--weights", default="compressed",
+                    choices=["dense", "compressed"],
+                    help="'compressed' packs the model at engine init and "
+                         "serves from the compressed pool; 'dense' serves "
+                         "the unconverted masked-dense weights")
     args = ap.parse_args()
 
-    cfg, params = _load(args.arch, args.smoke, args.impl)
+    # weights are born dense (srste semantics) so both --weights settings
+    # serve literally the same model: 'compressed' packs it offline.
+    cfg, params = _load(args.arch, args.smoke, args.impl, mode="srste")
+    compressed = args.weights == "compressed"
     gen_lens = ([int(g) for g in args.gen_mix.split(",")] if args.gen_mix
                 else [args.gen])
     n_req = args.requests or args.slots
@@ -71,17 +90,24 @@ def main() -> None:
     max_len = args.prompt_len + max(gen_lens)
 
     if args.scheduler == "continuous":
-        eng = ServeEngine(params, cfg, n_slots=args.slots, max_len=max_len)
+        eng = ServeEngine(params, cfg, n_slots=args.slots, max_len=max_len,
+                          compressed=compressed)
         results = eng.run(reqs)
         st = eng.stats()
-        print(f"continuous: {int(st['tokens'])} tokens in "
+        print(f"continuous[{args.weights}]: {int(st['tokens'])} tokens in "
               f"{int(st['decode_steps'])} decode steps, "
-              f"occupancy {st['occupancy']:.2f}")
+              f"occupancy {st['occupancy']:.2f}, "
+              f"weight stream {st['weight_stream_ratio']:.2f}x dense "
+              f"({int(st['weight_stream_bytes'])} B/step)")
     else:
+        if compressed:
+            params = convert_to_compressed(params, cfg)
+            cfg = cfg.replace(sparsity=dataclasses.replace(
+                cfg.sparsity, mode="compressed"))
         results, stats = serve_sequential(params, cfg, reqs, args.slots,
                                           max_len=max_len)
         toks = sum(len(r.tokens) for r in results.values())
-        print(f"sequential: {toks} tokens in "
+        print(f"sequential[{args.weights}]: {toks} tokens in "
               f"{int(stats['decode_steps'])} decode steps")
     rid0 = min(results)
     print("sample:", results[rid0].tokens[:12].tolist())

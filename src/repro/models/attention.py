@@ -17,6 +17,7 @@ from typing import Any, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.core.sparse_matmul import dense_forward_view, _decompress_xla
 from repro.dist.api import constrain
 from repro.models.common import (Params, apply_rope, rope_angles, softcap,
                                  sp_linear_apply, sp_linear_init)
@@ -324,21 +325,15 @@ def mla_apply(p: Params, x: jax.Array, cfg: ArchConfig, *,
 
 def _dense_weight(lin_params: Params, cfg: ArchConfig) -> jax.Array:
     """Dense view of a (possibly compressed/masked/srste) linear weight,
-    consistent with what sp_linear_apply multiplies by."""
+    consistent with what sp_linear_apply multiplies by (shared forward
+    semantics: sparse_matmul.dense_forward_view)."""
     spc = cfg.sparsity
     if "w_vals" in lin_params:
-        from repro.core.sparse_matmul import _decompress_xla
         o, nnz = lin_params["w_vals"].shape
         k = nnz * spc.m // spc.n
         return _decompress_xla(lin_params["w_vals"], lin_params["w_idx"],
                                spc.n, spc.m, k)
-    w = lin_params["w"]
-    if "mask" in lin_params:
-        w = w * lin_params["mask"].astype(w.dtype)
-    elif spc.mode == "srste" and spc.applies(w.shape[1], w.shape[0]):
-        from repro.core.sparse_matmul import ste_sparsify
-        w = ste_sparsify(w, spc.n, spc.m, spc.srste_lam)
-    return w
+    return dense_forward_view(lin_params, spc)
 
 
 # -------------------------------------------------------------- cross-attention

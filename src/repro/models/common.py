@@ -35,7 +35,33 @@ def sp_linear_init(key, in_dim: int, out_dim: int, cfg: SparsityConfig,
 
 
 def sp_linear_apply(p: Params, x: jax.Array, cfg: SparsityConfig) -> jax.Array:
+    """Apply one SparseLinear under the model's sparsity policy.
+
+    Implementation selection is *not* plumbed per call site: compressed
+    params route by input shape through ``sparse_matmul.select_impl``
+    (decode-shaped x -> the nm_spmv vindexmac path, prefill/training shapes
+    -> the nm_spmm tile path), so every model family inherits the decode
+    policy from its config alone."""
     return linear_apply(p, x, cfg)
+
+
+def linear_weight_bytes(p: Params, cfg: SparsityConfig) -> Tuple[int, int]:
+    """(dense_bytes, stream_bytes) one decode step streams for this linear.
+
+    Converted leaves stream ``w_vals`` (N/M of the dense values) plus the
+    packed ceil(log2 M)-bit col_idx words — the paper's storage format
+    (sparsity.storage_bytes accounting); dense leaves stream ``w``.  Biases
+    are negligible and excluded on both sides."""
+    if "w_vals" in p:
+        v = p["w_vals"]
+        nvals = int(v.size)
+        bits = max(1, (cfg.m - 1).bit_length())       # ceil(log2 M)
+        stream = nvals * v.dtype.itemsize + -(-nvals * bits // 8)
+        dense = nvals * cfg.m // cfg.n * v.dtype.itemsize
+        return dense, stream
+    w = p["w"]
+    nbytes = int(w.size) * w.dtype.itemsize
+    return nbytes, nbytes
 
 
 # ---------------------------------------------------------------------- norms

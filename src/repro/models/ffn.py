@@ -19,7 +19,8 @@ from typing import Any, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.sparse_matmul import SparsityConfig, ste_sparsify, _decompress_xla
+from repro.core.sparse_matmul import (SparsityConfig, dense_forward_view,
+                                      _decompress_xla)
 from repro.dist.api import constrain
 from repro.models.common import ACTIVATIONS, Params, sp_linear_apply, sp_linear_init
 from repro.models.config import ArchConfig
@@ -64,17 +65,13 @@ def _stacked_sparse_init(key, e: int, out_dim: int, in_dim: int,
 
 
 def _stacked_dense_view(p: Params, sp: SparsityConfig, in_dim: int) -> jax.Array:
-    """Dense view [E, out, in] of stacked expert weights under any mode."""
+    """Dense view [E, out, in] of stacked expert weights under any mode
+    (shared forward semantics: sparse_matmul.dense_forward_view)."""
     if "w_vals" in p:
         vals, idx = p["w_vals"], p["w_idx"]
         dec = jax.vmap(lambda v, i: _decompress_xla(v, i, sp.n, sp.m, in_dim))
         return dec(vals, idx)
-    w = p["w"]
-    if sp.applies(in_dim, w.shape[1]) and sp.mode in ("srste", "fixed"):
-        if sp.mode == "srste":
-            return ste_sparsify(w, sp.n, sp.m, sp.srste_lam)
-        return w * p["mask"].astype(w.dtype)
-    return w
+    return dense_forward_view(p, sp)
 
 
 def moe_init(key, cfg: ArchConfig, dtype):

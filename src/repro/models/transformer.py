@@ -21,6 +21,7 @@ from typing import Any, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.core import layers as sparse_layers
 from repro.dist.api import constrain
 from repro.models import attention as attn
 from repro.models import ffn as ffn_mod
@@ -664,6 +665,61 @@ _FAMS = {
 
 def init_model(key, cfg: ArchConfig):
     return _FAMS[cfg.family][0](key, cfg)
+
+
+# ------------------------------------------------- compressed serving weights
+
+# Linear-like param dicts that must stay dense: the MoE router runs in f32
+# and its [E, d] weight is not a SparseLinear.
+_DENSE_ONLY_LINEARS = frozenset({"router"})
+
+
+def _walk_linears(tree, fn, name: str = ""):
+    """Apply ``fn`` to every linear-like param dict in a model tree — a dict
+    holding 'w' [..., out, in] (plain, stacked [L, out, in], or stacked-MoE
+    [L, E, out, in]) or an already-converted {'w_vals', 'w_idx'} pair — and
+    recurse through everything else (norms, embeds, conv/SSM tensors)."""
+    if not isinstance(tree, dict):
+        return tree
+    if "w_vals" in tree or ("w" in tree and name not in _DENSE_ONLY_LINEARS
+                            and getattr(tree["w"], "ndim", 0) >= 2):
+        return fn(tree)
+    return {k: _walk_linears(v, fn, k) for k, v in tree.items()}
+
+
+def convert_to_compressed(params, cfg: ArchConfig):
+    """Model-wide offline packing pass: every SparseLinear in the tree moves
+    to the compressed N:M serving format (the paper's prune+pack step) via
+    the per-layer ``core.layers.convert_to_compressed``.  Stacked weights
+    compress along their last (contraction) axis unchanged; projections the
+    sparsity policy skips (``applies() == False``), the MoE router, norms,
+    embeddings, and SSM conv/state tensors are left as-is.  Idempotent."""
+    sp = cfg.sparsity
+    return _walk_linears(
+        params, lambda p: sparse_layers.convert_to_compressed(p, sp))
+
+
+def weight_stream_bytes(params, cfg: ArchConfig) -> Dict[str, float]:
+    """Decode weight-stream accounting (the paper's Fig 15 decode regime):
+    every decode step re-reads each linear once, so per-step traffic is the
+    sum over linears of their stored bytes — ``w_vals`` plus the packed
+    ceil(log2 M)-bit col_idx stream for converted leaves, the dense ``w``
+    otherwise.  ``dense_bytes`` is the same model with every converted leaf
+    decompressed (embeddings/norms/biases excluded on both sides)."""
+    from repro.models.common import linear_weight_bytes
+    tot = {"dense_bytes": 0, "stream_bytes": 0,
+           "compressed_linears": 0, "dense_linears": 0}
+
+    def acc(p):
+        d, s = linear_weight_bytes(p, cfg.sparsity)
+        tot["dense_bytes"] += d
+        tot["stream_bytes"] += s
+        tot["compressed_linears" if "w_vals" in p else "dense_linears"] += 1
+        return p
+
+    _walk_linears(params, acc)
+    tot["ratio"] = tot["stream_bytes"] / max(tot["dense_bytes"], 1)
+    return tot
 
 
 def _embed_in(p, cfg: ArchConfig, batch: Dict[str, Any]):

@@ -36,7 +36,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.models import decode_step, init_caches, prefill
+from repro.models import (convert_to_compressed, decode_step, init_caches,
+                          prefill, weight_stream_bytes)
 from repro.serve.cache import scatter_slot, seed_decode_caches
 from repro.serve.request import Request, RequestResult
 from repro.serve.scheduler import SlotScheduler
@@ -50,9 +51,25 @@ class _SlotState:
 
 
 class ServeEngine:
-    """Continuous-batching greedy-decode engine (single host, CPU-friendly)."""
+    """Continuous-batching greedy-decode engine (single host, CPU-friendly).
 
-    def __init__(self, params, cfg, n_slots: int, max_len: int):
+    ``compressed=True`` converts the whole model to the compressed N:M
+    serving format at init (``models.convert_to_compressed``) and serves
+    from that pool: decode-shaped activations then stream ``w_vals`` + the
+    packed col_idx words through the nm_spmv policy route (token-for-token
+    identical to serving the dense weights, at ~N/M the weight traffic)."""
+
+    def __init__(self, params, cfg, n_slots: int, max_len: int,
+                 compressed: bool = False):
+        if compressed:
+            # serve from the compressed pool: pack every SparseLinear offline
+            # (the paper's compress step) and flip the policy to 'compressed'
+            # so any leaf the packing skipped keeps masked-forward semantics.
+            params = convert_to_compressed(params, cfg)
+            cfg = cfg.replace(sparsity=dataclasses.replace(
+                cfg.sparsity, mode="compressed"))
+        self.compressed = compressed
+        self.weight_stream = weight_stream_bytes(params, cfg)
         self.params = params
         self.cfg = cfg
         self.n_slots = n_slots
@@ -139,6 +156,12 @@ class ServeEngine:
 
     def stats(self) -> Dict[str, float]:
         toks = sum(len(r.tokens) for r in self.results.values())
+        ws = self.weight_stream
         return {"decode_steps": float(self.decode_steps),
                 "occupancy": self.scheduler.occupancy(),
-                "tokens": float(toks)}
+                "tokens": float(toks),
+                # per-decode-step weight-stream traffic (every step re-reads
+                # each linear once; see models.weight_stream_bytes)
+                "weight_stream_bytes": float(ws["stream_bytes"]),
+                "dense_weight_bytes": float(ws["dense_bytes"]),
+                "weight_stream_ratio": float(ws["ratio"])}

@@ -11,6 +11,48 @@ from repro.models.common import (apply_rope, cross_entropy, layer_norm,
                                  rope_angles, softcap)
 
 
+def test_linear_apply_dense_under_compressed_matches_packed():
+    """Bugfix net (PR 3): dense params under a not-yet-converted
+    'compressed' policy go through the shared masked-einsum helper, so they
+    must compute *bitwise* what the packed path computes after conversion —
+    same mask selection, same f32 accumulation, same output dtype."""
+    import dataclasses
+    from repro.core.layers import (convert_to_compressed, linear_apply,
+                                   linear_init)
+    from repro.core.sparse_matmul import SparsityConfig
+    cfg = SparsityConfig(n=2, m=4, mode="compressed", impl="xla", min_dim=64)
+    for dtype in (jnp.float32, jnp.bfloat16):
+        p = linear_init(jax.random.PRNGKey(4), 128, 64,
+                        dataclasses.replace(cfg, mode="srste"), dtype=dtype,
+                        use_bias=True)
+        assert "w" in p                       # stored dense
+        x = jax.random.normal(jax.random.PRNGKey(5),
+                              (2, 128), jnp.float32).astype(dtype)
+        y_masked = linear_apply(p, x, cfg)    # dense params, compressed policy
+        y_packed = linear_apply(convert_to_compressed(p, cfg), x, cfg)
+        assert y_masked.dtype == y_packed.dtype == dtype
+        np.testing.assert_array_equal(np.asarray(y_masked, jnp.float32),
+                                      np.asarray(y_packed, jnp.float32))
+
+
+def test_dense_forward_view_masks_under_compressed_policy():
+    """The shared dense-view helper (MoE stacked einsums, MLA absorbed
+    decode) must apply the N:M mask for unconverted params under a
+    compressed policy — never silently return the unmasked weight."""
+    from repro.core.sparse_matmul import SparsityConfig, dense_forward_view
+    from repro.core.sparsity import sparsify
+    w = jax.random.normal(jax.random.PRNGKey(6), (64, 128))
+    cfg = SparsityConfig(n=2, m=4, mode="compressed", min_dim=64)
+    np.testing.assert_array_equal(
+        np.asarray(dense_forward_view({"w": w}, cfg)),
+        np.asarray(sparsify(w, 2, 4)))
+    # stacked expert weights [E, out, in] mask along the last axis too
+    ws = jax.random.normal(jax.random.PRNGKey(7), (3, 64, 128))
+    np.testing.assert_array_equal(
+        np.asarray(dense_forward_view({"w": ws}, cfg)),
+        np.asarray(sparsify(ws, 2, 4)))
+
+
 def test_rms_norm_unit_variance():
     p, _ = rms_norm_init(64)
     x = jax.random.normal(jax.random.PRNGKey(0), (4, 64)) * 7.0

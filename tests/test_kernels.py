@@ -234,6 +234,88 @@ def test_diff_spmv_kernel(nm, dtype, mode):
                                np.asarray(y_ref, jnp.float32), **_tol(dtype))
 
 
+# ---------------------------------------------------------------------------
+# Decode-shape execution policy (PR 3): with impl='auto', compressed linears
+# route by input shape — seq-len-1 decode steps and rank-2 small-batch
+# matvecs take the nm_spmv vindexmac path, prefill shapes keep the nm_spmm
+# tile path.  The policy lives in one place (sparse_matmul.select_impl), so
+# these are its unit tests.
+# ---------------------------------------------------------------------------
+
+import dataclasses
+
+from repro.core.sparse_matmul import (SparsityConfig, default_impl,
+                                      is_decode_shape, nm_matmul, select_impl)
+from repro.core.sparsity import NMSparse
+
+
+def test_decode_shape_detection():
+    assert is_decode_shape((4, 1, 256))          # [B, 1, d] decode step
+    assert not is_decode_shape((4, 32, 256))     # prefill / training
+    assert is_decode_shape((8, 256))             # small-batch matvec
+    assert not is_decode_shape((64, 256))        # GEMM-sized batch
+    assert is_decode_shape((2, 4, 1, 256))       # any leading dims, seq 1
+
+
+def test_select_impl_cpu_routes_decode_to_fused_decompress():
+    cfg = SparsityConfig(impl="auto")
+    # non-TPU backends: decode keeps the fused slot-loop decompress (same
+    # decompress order as the kernel, bitwise-stable vs the masked path)
+    assert select_impl(cfg, (4, 1, 256)) == "xla"
+    assert select_impl(cfg, (4, 32, 256)) == default_impl((4, 32, 256))
+    # an explicitly pinned impl always wins over the shape policy
+    assert select_impl(dataclasses.replace(cfg, impl="ref"), (4, 1, 256)) == "ref"
+    # decode_impl pins only the decode side
+    pin = dataclasses.replace(cfg, decode_impl="spmv_interpret")
+    assert select_impl(pin, (4, 1, 256)) == "spmv_interpret"
+    assert select_impl(pin, (4, 32, 256)) == default_impl((4, 32, 256))
+
+
+def test_select_impl_tpu_routes_decode_to_spmv(monkeypatch):
+    import repro.core.sparse_matmul as sm
+    monkeypatch.setattr(sm.jax, "default_backend", lambda: "tpu")
+    cfg = SparsityConfig(impl="auto")
+    assert select_impl(cfg, (4, 1, 256)) == "spmv"       # seq-len 1: vindexmac
+    assert select_impl(cfg, (4, 32, 256)) == "pallas"    # prefill: spmm tiles
+    assert select_impl(cfg, (2, 256)) == "spmv"          # small-batch matvec
+    one = dataclasses.replace(cfg, spmv_mode="onehot")
+    assert select_impl(one, (4, 1, 256)) == "spmv_onehot"
+
+
+@pytest.mark.parametrize("impl", ["spmv_interpret"])
+def test_nm_matmul_spmv_impl_matches_ref(impl):
+    """The spmv impl names dispatch through nm_matmul to the decode kernel
+    (leading dims flattened like every other route)."""
+    n, m = 2, 4
+    kw = jax.random.split(jax.random.PRNGKey(30))
+    w = jax.random.normal(kw[0], (64, 256))
+    x = jax.random.normal(kw[1], (4, 1, 256))
+    sp = compress(w, n, m)
+    y = nm_matmul(x, sp, impl=impl)
+    assert y.shape == (4, 1, 64)
+    y_ref = kref.nm_spmv_ref(x.reshape(-1, 256), sp.values, sp.indices, n, m)
+    np.testing.assert_allclose(np.asarray(y.reshape(-1, 64)),
+                               np.asarray(y_ref), rtol=1e-4, atol=1e-4)
+
+
+def test_decode_route_spmv_matches_tile_path():
+    """Full policy stack on one SparseLinear: a decode-shaped input forced
+    through the spmv kernel (interpret mode) agrees with the xla tile-path
+    result for the same compressed params."""
+    from repro.core.layers import linear_apply, linear_init
+    cfg = SparsityConfig(n=2, m=4, impl="auto", decode_impl="spmv_interpret",
+                         min_dim=64)
+    p = linear_init(jax.random.PRNGKey(31), 256, 128,
+                    dataclasses.replace(cfg, mode="compressed"),
+                    dtype=jnp.float32)
+    assert "w_vals" in p
+    x = jax.random.normal(jax.random.PRNGKey(32), (4, 1, 256))
+    y_spmv = linear_apply(p, x, cfg)
+    y_tile = linear_apply(p, x, dataclasses.replace(cfg, impl="xla"))
+    np.testing.assert_allclose(np.asarray(y_spmv), np.asarray(y_tile),
+                               rtol=1e-5, atol=1e-5)
+
+
 def test_traffic_model_sparse_beats_dense():
     from repro.kernels.ops import traffic_mm, traffic_spmv
     s = traffic_mm(512, 1024, 4096, 2, 4, sparse=True)
