@@ -1,13 +1,19 @@
-"""Shared benchmark harness: timing + CSV emission.
+"""Shared benchmark harness: timing + CSV + BENCH json emission.
 
 Every fig* module exposes run(quick) -> list of (name, us_per_call, derived)
 rows; benchmarks.run prints them as ``name,us_per_call,derived`` CSV.
+
+Serve benchmarks additionally emit a machine-readable ``BENCH_<n>.json``
+artifact through ``write_bench`` — one shared emission path so the CI
+bench-trajectory job can assert every report the same way (top-level
+``bench`` name + ``ok`` flag).
 """
 
 from __future__ import annotations
 
+import json
 import time
-from typing import Any, Callable, List, Tuple
+from typing import Any, Callable, Dict, List, Tuple
 
 import jax
 import numpy as np
@@ -44,3 +50,17 @@ def make_sparse_problem(key, r: int, k: int, c: int, n: int, m: int,
 def emit(rows: List[Row]) -> None:
     for name, us, derived in rows:
         print(f"{name},{us:.1f},{derived}")
+
+
+def write_bench(report: Dict[str, Any], out: str) -> None:
+    """Unified BENCH_<n>.json emission for the bench-trajectory CI job.
+
+    ``report`` must carry a top-level ``bench`` (benchmark name) and ``ok``
+    (bool pass flag); the job uploads the file and asserts ``ok``."""
+    for key in ("bench", "ok"):
+        if key not in report:
+            raise ValueError(f"bench report missing required key {key!r}")
+    report = dict(report, ok=bool(report["ok"]))
+    with open(out, "w") as f:
+        json.dump(report, f, indent=2, sort_keys=True)
+    print(f"wrote {out}")

@@ -23,7 +23,6 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
-import json
 import time
 from typing import Dict, List
 
@@ -31,13 +30,13 @@ import jax
 import numpy as np
 
 try:
-    from benchmarks.common import Row
+    from benchmarks.common import Row, write_bench
 except ModuleNotFoundError:            # invoked as a script from anywhere
     import os
     import sys
     sys.path.insert(0, os.path.dirname(os.path.dirname(
         os.path.abspath(__file__))))
-    from benchmarks.common import Row
+    from benchmarks.common import Row, write_bench
 
 # one arch per row-independent family (MoE expert capacity couples batch
 # rows, so the moe family's equivalence only holds under matched batch
@@ -165,9 +164,7 @@ def main() -> None:
               f"steps {c['decode_steps']} vs oracle {r['oracle_decode_steps']} | "
               f"tokens {'MATCH' if r['token_match'] else 'MISMATCH'}")
 
-    with open(args.out, "w") as f:
-        json.dump(report, f, indent=2, sort_keys=True)
-    print(f"wrote {args.out}")
+    write_bench(report, args.out)
     if not report["ok"]:
         raise SystemExit("compressed serving diverged from dense "
                          "(token mismatch or decode-step regression)")

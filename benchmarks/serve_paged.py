@@ -1,0 +1,195 @@
+"""Paged vs slotted KV serving at equal cache memory.
+
+The slotted pool admits by *rows*: every slot reserves a whole ``max_len``
+row, so a KV budget of B block-equivalents serves at most
+``B // table_width`` concurrent requests no matter how short they are.  The
+paged pool admits by *blocks* (the block-table indirection of
+``repro.serve.paged``), so the same budget holds
+``B // blocks_per_request`` short requests concurrently.
+
+This benchmark gives both engines the SAME usable KV block budget and a
+trace of short ragged requests that oversubscribes the slotted layout:
+paged admits more of them at once, finishes the trace in fewer ticks, emits
+**token-for-token identical** output, and — because prompts are bucketed —
+compiles at most ``len(prefill_buckets)`` prefill shapes while slotted
+compiles one per distinct prompt length.
+
+Exits non-zero on token mismatch, a tick regression, or a bucket-count
+violation; the CI ``bench-trajectory`` job runs ``--smoke`` and uploads the
+emitted ``BENCH_4.json``.
+
+Standalone:  PYTHONPATH=src python benchmarks/serve_paged.py [--smoke]
+Also exposes ``run(quick)`` rows for the benchmarks.run CSV harness.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+from typing import Dict, List
+
+import jax
+import numpy as np
+
+try:
+    from benchmarks.common import Row, write_bench
+except ModuleNotFoundError:            # invoked as a script from anywhere
+    import os
+    import sys
+    sys.path.insert(0, os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))))
+    from benchmarks.common import Row, write_bench
+
+# one arch per row-independent family (moe needs matched batch composition)
+FAMILY_ARCHS = {
+    "dense": "llama3.2-1b",
+    "ssm": "falcon-mamba-7b",
+    "hybrid": "zamba2-7b",
+    "audio": "whisper-small",
+}
+
+# ragged request shapes, all spanning plen + gen - 1 = 8 positions — exactly
+# 2 blocks of 4, so a budget of 8 blocks holds 4 of them concurrently while
+# the slotted layout (whole 16-position rows = 4 blocks each) holds only 2
+PROMPTS = (4, 5, 6, 7)
+GENS = (5, 4, 3, 2)
+
+
+def _setup(arch: str, n_requests: int):
+    from repro.configs import get_config
+    from repro.models import init_model
+    from repro.serve import synthetic_request
+    cfg = get_config(arch, smoke=True)
+    cfg = cfg.replace(sparsity=dataclasses.replace(
+        cfg.sparsity, mode="compressed", impl="xla"))
+    params, _ = init_model(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+    reqs = [synthetic_request(cfg, rng, rid=i,
+                              prompt_len=PROMPTS[i % len(PROMPTS)],
+                              max_new_tokens=GENS[i % len(GENS)])
+            for i in range(n_requests)]
+    return cfg, params, reqs
+
+
+def bench_family(arch: str, n_requests: int = 8, max_len: int = 16,
+                 block_size: int = 4, paged_slots: int = 4) -> Dict:
+    from repro.serve import ServeEngine
+    cfg, params, reqs = _setup(arch, n_requests)
+    table_width = -(-max_len // block_size)
+    # every request above spans the same number of positions; the budget is
+    # exactly enough blocks for paged_slots of them, however blocks divide
+    span = max(p + g - 1 for p, g in zip(PROMPTS, GENS))
+    budget_blocks = paged_slots * -(-span // block_size)
+    slotted_slots = max(budget_blocks // table_width, 1)
+
+    out: Dict = {"arch": arch, "block_size": block_size, "max_len": max_len,
+                 "n_requests": n_requests, "budget_blocks": budget_blocks,
+                 "slots": {"paged": paged_slots, "slotted": slotted_slots}}
+    engines: Dict[str, Dict] = {}
+    admitted: Dict[str, Dict[int, int]] = {}
+    for kind in ("slotted", "paged"):
+        kw = dict(kv="paged", block_size=block_size,
+                  n_blocks=budget_blocks + 1) if kind == "paged" else {}
+        t0 = time.time()
+        eng = ServeEngine(params, cfg,
+                          n_slots=paged_slots if kind == "paged"
+                          else slotted_slots, max_len=max_len, **kw)
+        engines[kind] = eng.run(reqs)
+        dt = time.time() - t0
+        st = eng.stats()
+        admitted[kind] = {rid: r.admitted_at
+                          for rid, r in engines[kind].items()}
+        out[kind] = {
+            "tokens": int(st["tokens"]),
+            "ticks": int(st["ticks"]),
+            "decode_steps": int(st["decode_steps"]),
+            "occupancy": round(st["occupancy"], 4),
+            "prefill_compiles": int(st["prefill_compiles"]),
+            "kv_bytes_resident_end": int(st["kv_bytes_resident"]),
+            "seconds": round(dt, 4),
+        }
+        if kind == "paged":
+            out[kind].update({
+                "preemptions": int(st["preemptions"]),
+                "kv_bytes_peak": int(st["kv_bytes_peak"]),
+                "kv_bytes_capacity": int(st["kv_bytes_capacity"]),
+                "buckets": list(eng.prefill_buckets),
+            })
+
+    out["token_match"] = all(
+        np.array_equal(engines["slotted"][r.rid].tokens,
+                       engines["paged"][r.rid].tokens) for r in reqs)
+    deltas = [admitted["slotted"][r.rid] - admitted["paged"][r.rid]
+              for r in reqs]
+    out["admitted_earlier"] = sum(d > 0 for d in deltas)
+    out["mean_admission_delta_ticks"] = round(sum(deltas) / len(deltas), 3)
+    out["ticks_ok"] = out["paged"]["ticks"] < out["slotted"]["ticks"]
+    out["compiles_ok"] = (out["paged"]["prefill_compiles"]
+                          <= len(out["paged"]["buckets"]))
+    return out
+
+
+def bench(families: List[str], **kw) -> Dict:
+    report = {"bench": "serve_paged", "families": {}, "ok": True}
+    for fam in families:
+        res = bench_family(FAMILY_ARCHS[fam], **kw)
+        report["families"][fam] = res
+        report["ok"] &= (res["token_match"] and res["ticks_ok"]
+                         and res["compiles_ok"])
+    return report
+
+
+def run(quick: bool = True) -> List[Row]:
+    rows: List[Row] = []
+    rep = bench(["dense"] if quick else list(FAMILY_ARCHS))
+    for fam, r in rep["families"].items():
+        rows.append((f"serve_paged_{fam}", r["paged"]["seconds"] * 1e6,
+                     f"ticks{r['paged']['ticks']}vs{r['slotted']['ticks']}|"
+                     f"early{r['admitted_earlier']}|"
+                     f"match{int(r['token_match'])}"))
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--families", default="dense,ssm,hybrid,audio",
+                    help="comma list from {%s}" % ",".join(FAMILY_ARCHS))
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--block-size", type=int, default=4)
+    ap.add_argument("--max-len", type=int, default=16)
+    ap.add_argument("--paged-slots", type=int, default=4)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny CI iteration (6 requests)")
+    ap.add_argument("--out", default="BENCH_4.json")
+    args = ap.parse_args()
+
+    fams = [f.strip() for f in args.families.split(",") if f.strip()]
+    for f in fams:
+        if f not in FAMILY_ARCHS:
+            raise SystemExit(f"unknown family {f!r}; known: {list(FAMILY_ARCHS)}")
+    kw = dict(n_requests=6 if args.smoke else args.requests,
+              max_len=args.max_len, block_size=args.block_size,
+              paged_slots=args.paged_slots)
+
+    report = bench(fams, **kw)
+    for fam, r in report["families"].items():
+        s, p = r["slotted"], r["paged"]
+        print(f"{fam:>7} ({r['arch']}): "
+              f"ticks {p['ticks']} vs {s['ticks']} slotted | "
+              f"{r['admitted_earlier']}/{r['n_requests']} admitted earlier "
+              f"(mean {r['mean_admission_delta_ticks']} ticks) | "
+              f"prefill shapes {p['prefill_compiles']} "
+              f"(buckets {len(p['buckets'])}) vs {s['prefill_compiles']} | "
+              f"KV peak {p['kv_bytes_peak']}/{p['kv_bytes_capacity']} B | "
+              f"tokens {'MATCH' if r['token_match'] else 'MISMATCH'}")
+
+    write_bench(report, args.out)
+    if not report["ok"]:
+        raise SystemExit("paged serving failed an invariant "
+                         "(token mismatch, tick regression, or bucket "
+                         "overflow)")
+
+
+if __name__ == "__main__":
+    main()

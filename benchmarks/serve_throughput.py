@@ -12,7 +12,9 @@ short request is refilled from the queue on the next tick instead of idling
 until the batch's slowest member drains.
 
 Standalone:  PYTHONPATH=src python benchmarks/serve_throughput.py [--smoke]
-Also exposes ``run(quick)`` rows for the benchmarks.run CSV harness.
+Also exposes ``run(quick)`` rows for the benchmarks.run CSV harness, and
+emits ``BENCH_2.json`` (shared ``common.write_bench`` format) for the CI
+bench-trajectory job.
 """
 
 from __future__ import annotations
@@ -25,13 +27,13 @@ from typing import List
 import jax
 
 try:
-    from benchmarks.common import Row
+    from benchmarks.common import Row, write_bench
 except ModuleNotFoundError:            # invoked as a script from anywhere
     import os
     import sys
     sys.path.insert(0, os.path.dirname(os.path.dirname(
         os.path.abspath(__file__))))
-    from benchmarks.common import Row
+    from benchmarks.common import Row, write_bench
 
 
 def _setup(arch: str, impl: str, n_requests: int, prompt_len: int,
@@ -107,6 +109,9 @@ def main() -> None:
     ap.add_argument("--arrival-every", type=int, default=0)
     ap.add_argument("--smoke", action="store_true",
                     help="tiny CI iteration (6 requests, short gens)")
+    ap.add_argument("--out", default="BENCH_2.json",
+                    help="machine-readable report for the bench-trajectory "
+                         "CI job (shared write_bench emission)")
     args = ap.parse_args()
 
     if args.smoke:
@@ -127,6 +132,12 @@ def main() -> None:
     c, s = res["continuous"], res["sequential"]
     print(f"continuous/sequential: {s['decode_steps'] / max(c['decode_steps'], 1):.2f}x "
           f"fewer decode steps, {c['tok_per_sec'] / max(s['tok_per_sec'], 1e-9):.2f}x tok/s")
+    write_bench({"bench": "serve_throughput",
+                 "ok": c["decode_steps"] < s["decode_steps"],
+                 "sequential": s, "continuous": c,
+                 "step_ratio": round(s["decode_steps"]
+                                     / max(c["decode_steps"], 1), 4)},
+                args.out)
     if c["decode_steps"] >= s["decode_steps"]:
         raise SystemExit("continuous batching did not reduce decode steps")
 

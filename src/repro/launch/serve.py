@@ -2,7 +2,7 @@
 
   PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b --smoke \
       --slots 4 --prompt-len 32 --gen 16 --scheduler continuous \
-      --weights compressed
+      --weights compressed --kv paged --block-size 8
 
 ``--scheduler sequential`` runs the fixed-batch oracle loop (the whole batch
 decodes in lockstep until its slowest member finishes); ``continuous`` runs
@@ -11,9 +11,12 @@ from the compressed N:M pool — the model is packed offline at engine init
 (``models.convert_to_compressed``) and decode streams w_vals + packed
 col_idx through the nm_spmv policy route; ``--weights dense`` serves the
 same weights unconverted (masked-dense forward), emitting identical tokens
-at ~M/N the decode weight traffic.  ``serve`` is kept as the PR-1 API
-(fixed batch of identical requests) for the examples and the integration
-tests.
+at ~M/N the decode weight traffic.  ``--kv paged`` swaps the slot-per-row
+cache for the block-pool layout of ``repro.serve.paged`` (block-table
+indirection, block-aware admission, bucketed prefill); ``--kv slotted``
+(the default) keeps the PR-2 layout and is the token-equality oracle.
+``serve`` is kept as the PR-1 API (fixed batch of identical requests) for
+the examples and the integration tests.
 """
 
 from __future__ import annotations
@@ -76,6 +79,15 @@ def main() -> None:
                     help="'compressed' packs the model at engine init and "
                          "serves from the compressed pool; 'dense' serves "
                          "the unconverted masked-dense weights")
+    ap.add_argument("--kv", default="slotted", choices=["slotted", "paged"],
+                    help="'paged' serves through the block-table KV pool "
+                         "(continuous scheduler only); 'slotted' is the "
+                         "whole-row oracle layout")
+    ap.add_argument("--block-size", type=int, default=8,
+                    help="paged pool: positions per KV block")
+    ap.add_argument("--blocks", type=int, default=0,
+                    help="paged pool: physical block count incl. the trash "
+                         "block (0 = full provisioning)")
     args = ap.parse_args()
 
     # weights are born dense (srste semantics) so both --weights settings
@@ -91,15 +103,26 @@ def main() -> None:
 
     if args.scheduler == "continuous":
         eng = ServeEngine(params, cfg, n_slots=args.slots, max_len=max_len,
-                          compressed=compressed)
+                          compressed=compressed, kv=args.kv,
+                          block_size=args.block_size,
+                          n_blocks=args.blocks or None)
         results = eng.run(reqs)
         st = eng.stats()
-        print(f"continuous[{args.weights}]: {int(st['tokens'])} tokens in "
+        print(f"continuous[{args.weights},{args.kv}]: "
+              f"{int(st['tokens'])} tokens in "
               f"{int(st['decode_steps'])} decode steps, "
               f"occupancy {st['occupancy']:.2f}, "
               f"weight stream {st['weight_stream_ratio']:.2f}x dense "
               f"({int(st['weight_stream_bytes'])} B/step)")
+        if args.kv == "paged":
+            print(f"paged pool: {int(st['kv_bytes_peak'])} B KV peak of "
+                  f"{int(st['kv_bytes_capacity'])} B capacity, "
+                  f"{int(st['prefill_compiles'])} prefill shapes, "
+                  f"{int(st['preemptions'])} preemptions")
     else:
+        if args.kv == "paged":
+            raise SystemExit("--kv paged requires --scheduler continuous "
+                             "(the sequential oracle is slotted by design)")
         if compressed:
             params = convert_to_compressed(params, cfg)
             cfg = cfg.replace(sparsity=dataclasses.replace(

@@ -140,16 +140,50 @@ def gqa_cache_init(cfg: ArchConfig, batch: int, max_len: int, dtype,
     return ({"k": z, "v": z}, {"k": spec, "v": spec})
 
 
+def _paged_update(cache, updates, block_table, cache_pos):
+    """Write one new token per batch row through the block table and gather
+    each row's stream back in logical order.
+
+    Cache leaves are block pools ``[n_blocks, block_size, ...]``; row r's
+    token at position p lives at physical block
+    ``block_table[r, p // block_size]``, offset ``p % block_size`` — the
+    software analog of the paper's indexed register reads (``cache_pos``
+    must be the int32 [B] per-slot vector).  ``updates`` maps leaf name to
+    that row's new value ([B, ...], no seq axis).  Returns
+    ``(new_cache, reads, length)`` with ``reads[name]`` in the plain
+    position-indexed layout ``[B, table_width * block_size, ...]`` the
+    non-paged score path expects."""
+    bsz = next(iter(cache.values())).shape[1]
+    posv = jnp.reshape(cache_pos, (-1,))
+    blk = block_table[jnp.arange(posv.shape[0]), posv // bsz]
+    off = posv % bsz
+    length = block_table.shape[1] * bsz
+    new, reads = {}, {}
+    for name, val in updates.items():
+        c = cache[name].at[blk, off].set(val.astype(cache[name].dtype))
+        new[name] = c
+        reads[name] = c[block_table].reshape(
+            (posv.shape[0], length) + c.shape[2:])
+    return new, reads, length
+
+
 def gqa_apply(p: Params, x: jax.Array, cfg: ArchConfig, *,
               positions: jax.Array, window: Optional[int] = None,
               cache: Optional[Params] = None,
               cache_pos: Optional[jax.Array] = None,
+              block_table: Optional[jax.Array] = None,
               return_kv: bool = False):
     """x [B, S, d].  Training/prefill when cache is None (or return_kv),
     single-token decode when cache is given (x [B, 1, d]).  cache_pos is a
     scalar (whole batch at one position) or an int32 [B] vector of per-slot
     positions (continuous batching: every batch row is an independent request
-    at its own depth)."""
+    at its own depth).
+
+    With ``block_table`` (int32 [B, max_blocks]) the cache leaves are a paged
+    block pool [n_blocks, block_size, kv, hd]: row r's token at position p
+    lives at physical block ``block_table[r, p // block_size]``, offset
+    ``p % block_size`` — the block-table indirection of ``serve.paged``
+    (cache_pos must be the [B] per-slot vector in this mode)."""
     b, s, d = x.shape
     h, kv, hd = cfg.n_heads, cfg.n_kv, cfg.hd()
     sp = cfg.sparsity
@@ -179,29 +213,40 @@ def gqa_apply(p: Params, x: jax.Array, cfg: ArchConfig, *,
                               chain_bf16=cfg.attn_chain_bf16)
         new_kv = {"k": k, "v": v} if return_kv else None
     else:
-        # decode: ring-buffer insertion.  Slot j of a length-L cache holds
-        # absolute position p = pos - ((pos - j) mod L); p < 0 marks an
-        # unfilled slot.  For L == max_len this reduces to the plain
-        # append-at-pos cache, so one code path serves both.
-        length = cache["k"].shape[1]
-        slot = cache_pos % length
-        if jnp.ndim(cache_pos):
-            # per-slot positions: row r writes at its own (slot[r]) offset
-            bidx = jnp.arange(b)
-            ck = cache["k"].at[bidx, slot].set(k[:, 0].astype(cache["k"].dtype))
-            cv = cache["v"].at[bidx, slot].set(v[:, 0].astype(cache["v"].dtype))
+        if block_table is not None:
+            # paged decode: write through the table, read the pool back via
+            # gather so the score einsum sees the same plain [B, T*bs, kv,
+            # hd] layout the slotted path uses (see _paged_update)
+            new_kv, reads, length = _paged_update(
+                cache, {"k": k[:, 0], "v": v[:, 0]}, block_table, cache_pos)
+            k_read, v_read = reads["k"], reads["v"]
         else:
-            ck = jax.lax.dynamic_update_slice(cache["k"],
-                                              k.astype(cache["k"].dtype),
-                                              (0, slot, 0, 0))
-            cv = jax.lax.dynamic_update_slice(cache["v"],
-                                              v.astype(cache["v"].dtype),
-                                              (0, slot, 0, 0))
-        new_kv = {"k": ck, "v": cv}
+            # decode: ring-buffer insertion.  Slot j of a length-L cache holds
+            # absolute position p = pos - ((pos - j) mod L); p < 0 marks an
+            # unfilled slot.  For L == max_len this reduces to the plain
+            # append-at-pos cache, so one code path serves both.
+            length = cache["k"].shape[1]
+            slot = cache_pos % length
+            if jnp.ndim(cache_pos):
+                # per-slot positions: row r writes at its own (slot[r]) offset
+                bidx = jnp.arange(b)
+                ck = cache["k"].at[bidx, slot].set(
+                    k[:, 0].astype(cache["k"].dtype))
+                cv = cache["v"].at[bidx, slot].set(
+                    v[:, 0].astype(cache["v"].dtype))
+            else:
+                ck = jax.lax.dynamic_update_slice(cache["k"],
+                                                  k.astype(cache["k"].dtype),
+                                                  (0, slot, 0, 0))
+                cv = jax.lax.dynamic_update_slice(cache["v"],
+                                                  v.astype(cache["v"].dtype),
+                                                  (0, slot, 0, 0))
+            new_kv = {"k": ck, "v": cv}
+            k_read, v_read = ck, cv
         g = h // kv
         qg = q.reshape(b, kv, g, hd)
         sc = jnp.einsum("bhgd,blhd->bhgl", qg.astype(jnp.float32),
-                        ck.astype(jnp.float32)) * hd ** -0.5
+                        k_read.astype(jnp.float32)) * hd ** -0.5
         sc = softcap(sc, cfg.softcap_attn)
         idx = jnp.arange(length)[None, :]
         posb = jnp.reshape(cache_pos, (-1, 1))          # [B, 1] or [1, 1]
@@ -211,7 +256,7 @@ def gqa_apply(p: Params, x: jax.Array, cfg: ArchConfig, *,
             valid &= abs_pos > posb - window
         sc = jnp.where(valid[:, None, None, :], sc, _NEG)
         pr = jax.nn.softmax(sc, axis=-1)
-        o = jnp.einsum("bhgl,blhd->bhgd", pr, cv.astype(jnp.float32))
+        o = jnp.einsum("bhgl,blhd->bhgd", pr, v_read.astype(jnp.float32))
         o = o.reshape(b, 1, h, hd).astype(x.dtype)
 
     y = sp_linear_apply(p["wo"], o.reshape(b, s, h * hd), sp)
@@ -264,6 +309,7 @@ def _mla_qkv(p, x, cfg, positions):
 def mla_apply(p: Params, x: jax.Array, cfg: ArchConfig, *,
               positions: jax.Array, cache: Optional[Params] = None,
               cache_pos: Optional[jax.Array] = None,
+              block_table: Optional[jax.Array] = None,
               return_kv: bool = False):
     b, s, d = x.shape
     h, nd, rd, vd = cfg.n_heads, cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
@@ -288,18 +334,28 @@ def mla_apply(p: Params, x: jax.Array, cfg: ArchConfig, *,
         # absorbed decode: scores/outputs computed in the latent space —
         # the cache stays [kv_lora + rope] per token (MLA's memory win).
         # cache_pos: scalar, or [B] per-slot positions (continuous batching).
-        if jnp.ndim(cache_pos):
+        if block_table is not None:
+            # paged absorbed decode: latent cache leaves are block pools
+            # [n_blocks, bs, r]; same indirection as GQA (see _paged_update)
+            new_kv, reads, _ = _paged_update(
+                cache, {"ckv": ckv[:, 0], "kpe": kpe[:, 0]}, block_table,
+                cache_pos)
+            cc_read, cp_read = reads["ckv"], reads["kpe"]
+        elif jnp.ndim(cache_pos):
             bidx = jnp.arange(b)
             cc = cache["ckv"].at[bidx, cache_pos].set(
                 ckv[:, 0].astype(cache["ckv"].dtype))
             cp = cache["kpe"].at[bidx, cache_pos].set(
                 kpe[:, 0].astype(cache["kpe"].dtype))
+            new_kv = {"ckv": cc, "kpe": cp}
+            cc_read, cp_read = cc, cp
         else:
             cc = jax.lax.dynamic_update_slice(
                 cache["ckv"], ckv.astype(cache["ckv"].dtype), (0, cache_pos, 0))
             cp = jax.lax.dynamic_update_slice(
                 cache["kpe"], kpe.astype(cache["kpe"].dtype), (0, cache_pos, 0))
-        new_kv = {"ckv": cc, "kpe": cp}
+            new_kv = {"ckv": cc, "kpe": cp}
+            cc_read, cp_read = cc, cp
         # materialize per-head up-proj weights (dense view for the einsum)
         wuk_dense = _dense_weight(p["wuk"], cfg)        # [h*nd, kv_lora]
         wuv_dense = _dense_weight(p["wuv"], cfg)        # [h*vd, kv_lora]
@@ -307,15 +363,15 @@ def mla_apply(p: Params, x: jax.Array, cfg: ArchConfig, *,
         wuv3 = wuv_dense.reshape(h, vd, cfg.kv_lora)
         qlat = jnp.einsum("bhd,hdr->bhr", qn[:, 0].astype(jnp.float32),
                           wuk3.astype(jnp.float32))
-        sc = jnp.einsum("bhr,blr->bhl", qlat, cc.astype(jnp.float32))
+        sc = jnp.einsum("bhr,blr->bhl", qlat, cc_read.astype(jnp.float32))
         sc += jnp.einsum("bhd,bld->bhl", qpe[:, 0].astype(jnp.float32),
-                         cp.astype(jnp.float32))
+                         cp_read.astype(jnp.float32))
         sc *= scale
-        idx = jnp.arange(cc.shape[1])[None, :]
+        idx = jnp.arange(cc_read.shape[1])[None, :]
         posb = jnp.reshape(cache_pos, (-1, 1))          # [B, 1] or [1, 1]
         sc = jnp.where((idx <= posb)[:, None, :], sc, _NEG)
         pr = jax.nn.softmax(sc, axis=-1)
-        ov = jnp.einsum("bhl,blr->bhr", pr, cc.astype(jnp.float32))
+        ov = jnp.einsum("bhl,blr->bhr", pr, cc_read.astype(jnp.float32))
         o = jnp.einsum("bhr,hdr->bhd", ov, wuv3.astype(jnp.float32))
         o = o.reshape(b, 1, h, vd).astype(x.dtype)
 

@@ -91,10 +91,11 @@ def _dense_block_init(key, cfg: ArchConfig, dtype):
 
 
 def _dense_block_apply(p, x, cfg: ArchConfig, *, positions, window=None,
-                       cache=None, cache_pos=None, return_kv=False):
+                       cache=None, cache_pos=None, block_table=None,
+                       return_kv=False):
     att = attn.mla_apply if cfg.mla else attn.gqa_apply
     kw = dict(positions=positions, cache=cache, cache_pos=cache_pos,
-              return_kv=return_kv)
+              block_table=block_table, return_kv=return_kv)
     if not cfg.mla:
         kw["window"] = window
     a, new_cache = att(p["attn"], _norm(p["ln1"], x, cfg), cfg, **kw)
@@ -123,11 +124,11 @@ def _moe_block_init(key, cfg: ArchConfig, dtype):
 
 
 def _moe_block_apply(p, x, cfg: ArchConfig, *, positions, cache=None,
-                     cache_pos=None, return_kv=False):
+                     cache_pos=None, block_table=None, return_kv=False):
     att = attn.mla_apply if cfg.mla else attn.gqa_apply
     a, new_cache = att(p["attn"], _norm(p["ln1"], x, cfg), cfg,
                        positions=positions, cache=cache, cache_pos=cache_pos,
-                       return_kv=return_kv)
+                       block_table=block_table, return_kv=return_kv)
     x = x + a
     xn = _norm(p["ln2"], x, cfg)
     h, aux = ffn_mod.moe_apply(p["moe"], xn, cfg)
@@ -216,15 +217,16 @@ def _lm_dense_caches(cfg: ArchConfig, batch: int, max_len: int, dtype):
     return _stackc(one, spec, cfg.n_layers)
 
 
-def _lm_dense_decode(p, cfg: ArchConfig, caches, x, pos):
+def _lm_dense_decode(p, cfg: ArchConfig, caches, x, pos, block_table=None):
     if cfg.local_global_period:
         def pair(x, xs):
             lp, cl, cg = xs
             x, ncl = _dense_block_apply(lp["local"], x, cfg, positions=pos,
                                         window=cfg.window, cache=cl,
-                                        cache_pos=pos)
+                                        cache_pos=pos, block_table=block_table)
             x, ncg = _dense_block_apply(lp["global"], x, cfg, positions=pos,
-                                        cache=cg, cache_pos=pos)
+                                        cache=cg, cache_pos=pos,
+                                        block_table=block_table)
             return x, (ncl, ncg)
         x, (nl, ng) = jax.lax.scan(
             pair, x, (p["pairs"], caches["local"], caches["global"]))
@@ -233,7 +235,7 @@ def _lm_dense_decode(p, cfg: ArchConfig, caches, x, pos):
         def body(x, xs):
             lp, cc = xs
             x, nc = _dense_block_apply(lp, x, cfg, positions=pos, cache=cc,
-                                       cache_pos=pos)
+                                       cache_pos=pos, block_table=block_table)
             return x, nc
         x, new_caches = jax.lax.scan(body, x, (p["layers"], caches))
     return _norm(p["lnf"], x, cfg), new_caches
@@ -272,7 +274,7 @@ def _lm_moe_forward(p, cfg: ArchConfig, x, positions):
     return _norm(p["lnf"], x, cfg), aux / max(cfg.n_layers - cfg.first_dense_layers, 1)
 
 
-def _lm_moe_decode(p, cfg: ArchConfig, caches, x, pos):
+def _lm_moe_decode(p, cfg: ArchConfig, caches, x, pos, block_table=None):
     nd = cfg.first_dense_layers
     cd = jax.tree.map(lambda c: c[:nd], caches) if nd else None
     cm = jax.tree.map(lambda c: c[nd:], caches)
@@ -281,14 +283,14 @@ def _lm_moe_decode(p, cfg: ArchConfig, caches, x, pos):
         def dbody(x, xs):
             lp, cc = xs
             x, nc = _dense_block_apply(lp, x, cfg, positions=pos, cache=cc,
-                                       cache_pos=pos)
+                                       cache_pos=pos, block_table=block_table)
             return x, nc
         x, new_d = jax.lax.scan(dbody, x, (p["dense_layers"], cd))
 
     def body(x, xs):
         lp, cc = xs
         x, nc, _ = _moe_block_apply(lp, x, cfg, positions=pos, cache=cc,
-                                    cache_pos=pos)
+                                    cache_pos=pos, block_table=block_table)
         return x, nc
     x, new_m = jax.lax.scan(body, x, (p["layers"], cm))
     new_caches = (jax.tree.map(lambda a, b: jnp.concatenate([a, b]), new_d, new_m)
@@ -328,7 +330,8 @@ def _lm_ssm_caches(cfg: ArchConfig, batch: int, max_len: int, dtype):
     return caches, specs
 
 
-def _lm_ssm_decode(p, cfg: ArchConfig, caches, x, pos):
+def _lm_ssm_decode(p, cfg: ArchConfig, caches, x, pos, block_table=None):
+    # SSM state is position-free: pos and block_table are unused
     def body(x, xs):
         lp, cc = xs
         x, nc = _ssm_block_apply(lp, x, cfg, cache=cc)
@@ -420,7 +423,7 @@ def _lm_hybrid_caches(cfg: ArchConfig, batch: int, max_len: int, dtype):
     return caches, specs
 
 
-def _lm_hybrid_decode(p, cfg: ArchConfig, caches, x, pos):
+def _lm_hybrid_decode(p, cfg: ArchConfig, caches, x, pos, block_table=None):
     def one_mamba(x, xs):
         lp, cc = xs
         x, nc = _ssm_block_apply(lp, x, cfg, cache=cc)
@@ -433,7 +436,7 @@ def _lm_hybrid_decode(p, cfg: ArchConfig, caches, x, pos):
             x, ngc = jax.lax.scan(one_mamba, x, (gp, gc))
             x, nac = _dense_block_apply(p["shared"], x, cfg, positions=pos,
                                         window=cfg.window, cache=ac,
-                                        cache_pos=pos)
+                                        cache_pos=pos, block_table=block_table)
             return x, (ngc, nac)
         x, (ng, na) = jax.lax.scan(
             group, x, (p["groups"], caches["groups"], caches["attn"]))
@@ -486,10 +489,12 @@ def _dec_block_init(key, cfg: ArchConfig, dtype):
 
 
 def _dec_block_apply(p, x, cfg: ArchConfig, enc_kv, *, positions, cache=None,
-                     cache_pos=None, return_kv=False):
+                     cache_pos=None, block_table=None, return_kv=False):
     a, new_cache = attn.gqa_apply(p["self"], _norm(p["ln1"], x, cfg), cfg,
                                   positions=positions, cache=cache,
-                                  cache_pos=cache_pos, return_kv=return_kv)
+                                  cache_pos=cache_pos,
+                                  block_table=block_table,
+                                  return_kv=return_kv)
     x = x + a
     x = x + attn.cross_attn_apply(p["cross"], _norm(p["ln2"], x, cfg),
                                   enc_kv, cfg)
@@ -548,11 +553,12 @@ def _encdec_caches(cfg: ArchConfig, batch: int, max_len: int, dtype):
     return caches, specs
 
 
-def _encdec_decode(p, cfg: ArchConfig, caches, x, pos):
+def _encdec_decode(p, cfg: ArchConfig, caches, x, pos, block_table=None):
     def body(x, xs):
         lp, cc, ck, cv = xs
         x, nc = _dec_block_apply(lp, x, cfg, (ck, cv), positions=pos,
-                                 cache=cc, cache_pos=pos)
+                                 cache=cc, cache_pos=pos,
+                                 block_table=block_table)
         return x, nc
     x, new_self = jax.lax.scan(
         body, x, (p["dec_layers"], caches["self"],
@@ -757,7 +763,8 @@ def init_caches(cfg: ArchConfig, batch: int, max_len: int):
     return _FAMS[cfg.family][2](cfg, batch, max_len, cfg.jdtype())
 
 
-def decode_step(p, cfg: ArchConfig, caches, tokens: jax.Array, pos: jax.Array):
+def decode_step(p, cfg: ArchConfig, caches, tokens: jax.Array, pos: jax.Array,
+                block_table: Optional[jax.Array] = None):
     """One token: tokens [B] int32 -> (logits [B, V], caches).
 
     pos is either a scalar int32 (the whole batch decodes at one position —
@@ -765,19 +772,31 @@ def decode_step(p, cfg: ArchConfig, caches, tokens: jax.Array, pos: jax.Array):
     batch row is an independent request at its own depth — the continuous-
     batching regime of repro.serve; attention caches then update and mask
     per row).  SSM/hybrid state caches are position-free, so only the
-    attention paths consume pos."""
+    attention paths consume pos.
+
+    block_table (int32 [B, max_blocks], optional) switches the attention
+    caches to the paged block-pool layout of ``serve.paged``: leaves are
+    [..., n_blocks, block_size, ...] and row r's position p resolves to
+    physical block ``block_table[r, p // block_size]``.  Requires the [B]
+    per-slot pos vector."""
     x = embed_apply(p["embed"], tokens[:, None])
     if cfg.scale_embeds:
         x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
     dec = _FAMS[cfg.family][3]
-    x, new_caches = dec(p, cfg, caches, x, pos)
+    x, new_caches = dec(p, cfg, caches, x, pos, block_table)
     logits = lm_head_apply(p["embed"], x, cfg.softcap_final)[:, 0]
     return logits, new_caches
 
 
-def prefill(p, cfg: ArchConfig, batch: Dict[str, Any]):
+def prefill(p, cfg: ArchConfig, batch: Dict[str, Any],
+            logit_pos: Optional[jax.Array] = None):
     """Inference prefill: full-sequence forward that emits per-layer caches and
-    only the last position's logits (no [B, S, V] materialization)."""
+    only the last position's logits (no [B, S, V] materialization).
+
+    logit_pos (scalar, optional) selects which position's logits to emit
+    instead of the last — the bucketed-prefill hook: a prompt right-padded to
+    a bucket length reads its logits at ``prompt_len - 1`` (causal attention
+    keeps positions < prompt_len independent of the padding)."""
     x = _embed_in(p, cfg, batch)
     b, s = x.shape[:2]
     positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
@@ -787,5 +806,9 @@ def prefill(p, cfg: ArchConfig, batch: Dict[str, Any]):
                        batch["enc_embeds"].astype(cfg.jdtype()))
     else:
         x, caches = pf(p, cfg, x, positions)
-    logits = lm_head_apply(p["embed"], x[:, -1:], cfg.softcap_final)[:, 0]
+    if logit_pos is None:
+        xl = x[:, -1:]
+    else:
+        xl = jax.lax.dynamic_slice_in_dim(x, logit_pos, 1, axis=1)
+    logits = lm_head_apply(p["embed"], xl, cfg.softcap_final)[:, 0]
     return logits, caches

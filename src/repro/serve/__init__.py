@@ -16,9 +16,17 @@ one preallocated KV-cache tree) fed by a FCFS request queue:
   ``scatter_slot`` writes a batch-1 cache into one pool slot, locating the
   slot axis structurally so a single admission path covers every family's
   cache layout (dense, local/global, MLA, ssm, hybrid, moe, audio).
+* ``paged``     — ``BlockPool``: the paged KV-cache pool.  Attention leaves
+  become ``[..., n_blocks, block_size, ...]`` block pools addressed through
+  per-request int32 block tables (``table[slot, pos // block_size]``) — the
+  software analog of the paper's indexed register reads — so cache memory is
+  admitted in blocks instead of whole ``max_len`` rows.
 * ``engine``    — ``ServeEngine``: prefill-on-admission + one batched
   ``decode_step`` per tick with a per-slot int32 position vector (the
-  attention caches update and mask per batch row).
+  attention caches update and mask per batch row).  ``kv="paged"`` routes
+  decode through the block table, buckets prefill lengths to a fixed set of
+  compiled shapes, appends blocks lazily, and preempts-to-queue when the
+  pool runs dry; ``kv="slotted"`` is the oracle layout.
 * ``sequential``— the fixed-batch oracle: the whole batch decodes in
   lockstep until its slowest member finishes.  Continuous batching must be
   token-for-token equivalent to it under matched batch composition; the
@@ -39,13 +47,15 @@ that ratio at 1.
 
 from repro.serve.cache import scatter_slot, seed_decode_caches
 from repro.serve.engine import ServeEngine
+from repro.serve.paged import BlockPool, default_buckets
 from repro.serve.request import (Request, RequestResult, synthetic_request,
                                  synthetic_trace)
 from repro.serve.scheduler import SlotScheduler
 from repro.serve.sequential import serve_fixed_batch, serve_sequential
 
 __all__ = [
-    "Request", "RequestResult", "ServeEngine", "SlotScheduler",
-    "scatter_slot", "seed_decode_caches", "serve_fixed_batch",
-    "serve_sequential", "synthetic_request", "synthetic_trace",
+    "BlockPool", "Request", "RequestResult", "ServeEngine", "SlotScheduler",
+    "default_buckets", "scatter_slot", "seed_decode_caches",
+    "serve_fixed_batch", "serve_sequential", "synthetic_request",
+    "synthetic_trace",
 ]

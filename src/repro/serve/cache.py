@@ -7,6 +7,9 @@ Two pieces:
   family.  Every attention branch length-clips to ``min(src, dst)`` and keeps
   the *last* tokens, so a prompt longer than the decode buffer degrades to a
   truncated-context decode instead of a ``dynamic_update_slice`` shape error.
+  The function is **pure**: it never mutates the ``caches`` argument or any
+  dict nested inside it — admission code can keep the zero template around
+  and re-seed it for every request.
 
 * ``scatter_slot`` — write a batch-1 cache tree into batch index ``slot`` of
   an n-slot pool tree.  The slot (batch) axis sits at a different depth per
@@ -19,46 +22,54 @@ Two pieces:
 
 from __future__ import annotations
 
+from typing import Optional
+
 import jax
 import jax.numpy as jnp
 
 
-def seed_decode_caches(cfg, caches, pf):
+def _seed_leaf(dst, src, src_len: Optional[int]):
+    """Write the first min(src, dst) sequence positions of ``src`` (seq axis
+    2: [stack, batch, seq, ...]) into ``dst`` at offset 0, returning a new
+    array.  ``src_len`` first clips the source to its *first* src_len
+    positions — the bucketed-prefill hook (positions beyond the real prompt
+    are padding and must never land in a decode cache)."""
+    if src_len is not None:
+        src = src[:, :, :src_len]
+    ln = min(src.shape[2], dst.shape[2])
+    return jax.lax.dynamic_update_slice(
+        dst, src[:, :, -ln:].astype(dst.dtype), (0,) * dst.ndim)
+
+
+def seed_decode_caches(cfg, caches, pf, src_len: Optional[int] = None):
     """Copy prefill caches (length = prompt) into the decode buffers.
 
     ``caches`` comes from ``init_caches(cfg, batch, max_len)``; ``pf`` from
     ``prefill`` on the same batch.  Sequence axes are length-clipped to
     ``min(prompt, max_len)`` keeping the last tokens (the windowed/ring
-    layers already behaved this way; the dense/moe/audio branches now match).
+    layers already behaved this way; the dense/moe/audio branches match).
+    ``src_len`` clips every attention source to its first ``src_len``
+    positions before seeding (bucketed prefill: the tail is padding).
+
+    Returns a NEW tree; the input ``caches`` tree (including nested dicts)
+    is left untouched.  SSM state leaves are position-free and are passed
+    through from ``pf`` unchanged.
     """
     if cfg.family == "dense" or cfg.family == "vlm":
         if cfg.local_global_period:
-            for kkey in ("local", "global"):
-                for f in ("k", "v"):
-                    src = pf[kkey][f]
-                    dst = caches[kkey][f]
-                    ln = min(src.shape[2], dst.shape[2])
-                    caches[kkey][f] = jax.lax.dynamic_update_slice(
-                        dst, src[:, :, -ln:].astype(dst.dtype), (0, 0, 0, 0, 0))
-        else:
-            for f in ("k", "v"):
-                src, dst = pf[f], caches[f]
-                ln = min(src.shape[2], dst.shape[2])
-                caches[f] = jax.lax.dynamic_update_slice(
-                    dst, src[:, :, -ln:].astype(dst.dtype), (0, 0, 0, 0, 0))
+            return {kkey: {f: _seed_leaf(caches[kkey][f], pf[kkey][f], src_len)
+                           for f in caches[kkey]}
+                    for kkey in ("local", "global")}
+        return {f: _seed_leaf(caches[f], pf[f], src_len) for f in caches}
     elif cfg.family == "ssm":
-        caches = pf  # state caches are position-free
+        return pf                     # state caches are position-free
     elif cfg.family == "hybrid":
-        new = dict(caches)
-        new["groups"] = pf["groups"]
+        new = {"groups": pf["groups"]}
         if "tail" in pf:
             new["tail"] = pf["tail"]
-        for f in ("k", "v"):
-            src, dst = pf["attn"][f], caches["attn"][f]
-            ln = min(src.shape[2], dst.shape[2])
-            new["attn"][f] = jax.lax.dynamic_update_slice(
-                dst, src[:, :, -ln:].astype(dst.dtype), (0, 0, 0, 0, 0))
-        caches = new
+        new["attn"] = {f: _seed_leaf(caches["attn"][f], pf["attn"][f], src_len)
+                       for f in caches["attn"]}
+        return new
     elif cfg.family == "moe":
         nd = cfg.first_dense_layers
         parts = []
@@ -67,19 +78,13 @@ def seed_decode_caches(cfg, caches, pf):
         parts.append(pf["moe"])
         merged = jax.tree.map(lambda *xs: jnp.concatenate(xs), *parts) \
             if len(parts) > 1 else parts[0]
-        for f in list(caches.keys()):
-            src, dst = merged[f], caches[f]
-            ln = min(src.shape[2], dst.shape[2])
-            caches[f] = jax.lax.dynamic_update_slice(
-                dst, src[:, :, -ln:].astype(dst.dtype), (0,) * dst.ndim)
+        return {f: _seed_leaf(caches[f], merged[f], src_len) for f in caches}
     elif cfg.family == "audio":
-        for f in ("k", "v"):
-            src, dst = pf["self"][f], caches["self"][f]
-            ln = min(src.shape[2], dst.shape[2])
-            caches["self"][f] = jax.lax.dynamic_update_slice(
-                dst, src[:, :, -ln:].astype(dst.dtype), (0, 0, 0, 0, 0))
-        caches["cross_k"] = pf["cross_k"].astype(caches["cross_k"].dtype)
-        caches["cross_v"] = pf["cross_v"].astype(caches["cross_v"].dtype)
+        return {"self": {f: _seed_leaf(caches["self"][f], pf["self"][f],
+                                       src_len)
+                         for f in caches["self"]},
+                "cross_k": pf["cross_k"].astype(caches["cross_k"].dtype),
+                "cross_v": pf["cross_v"].astype(caches["cross_v"].dtype)}
     return caches
 
 
@@ -89,15 +94,23 @@ def scatter_slot(pool, single, slot: int):
     Per leaf, the slot axis is the first axis where the two shapes differ
     (both trees come from ``init_caches`` with batch = n_slots vs batch = 1,
     so every other axis agrees).  With n_slots == 1 the shapes coincide and
-    the single tree simply replaces the pool.
+    the single tree simply replaces the pool (dtype-cast to the pool's).
+    A leaf pair whose shapes differ in rank or in more than one axis cannot
+    have come from the same cache layout — that is an aliasing bug upstream,
+    so it raises instead of scattering garbage.
     """
     def one(dst, src):
         if dst.shape == src.shape:
             return src.astype(dst.dtype)
-        ax = next(i for i, (a, b) in enumerate(zip(dst.shape, src.shape))
-                  if a != b)
+        diff = [i for i, (a, b) in enumerate(zip(dst.shape, src.shape))
+                if a != b]
+        if dst.ndim != src.ndim or len(diff) != 1:
+            raise ValueError(
+                f"scatter_slot: cannot locate the slot axis between pool "
+                f"leaf {dst.shape} and single-request leaf {src.shape} "
+                f"(expected identical shapes except one axis)")
         start = [0] * dst.ndim
-        start[ax] = slot
+        start[diff[0]] = slot
         return jax.lax.dynamic_update_slice(dst, src.astype(dst.dtype),
                                             tuple(start))
 

@@ -1,36 +1,54 @@
-"""Continuous-batching serve engine over a slotted KV-cache pool.
+"""Continuous-batching serve engine: slotted or paged KV cache.
 
-The engine owns one decode-cache pool of ``n_slots`` batch rows
-(``init_caches(cfg, n_slots, max_len)``) and a per-slot int32 position
-vector.  Serving interleaves two operations:
+The engine owns a decode-cache pool and a per-slot int32 position vector and
+interleaves two operations:
 
 * **prefill-on-admission** — when the scheduler places a queued request into
   a freed slot, the engine prefills that request alone (batch 1), seeds a
-  single-slot decode cache from the prefill caches (``seed_decode_caches``),
-  and scatters it into the pool at the slot's batch index
-  (``cache.scatter_slot``).  The request's first token is the argmax of the
-  prefill logits, exactly as in the fixed-batch oracle.
+  single-slot decode cache from the prefill caches, and installs it:
+  the slotted pool scatters a batch row (``cache.scatter_slot``), the paged
+  pool writes blocks through the slot's table (``paged.BlockPool.seed``).
 
 * **batched decode** — one ``decode_step`` per tick over the whole pool with
-  the per-slot position vector (see ``models.transformer.decode_step``:
-  attention caches update and mask per batch row).  Rows whose slot is idle
-  carry stale tokens/positions; their cache writes land in slots that are
-  fully overwritten at the next admission, and batch rows are independent in
-  every model op, so active outputs are unaffected.  (Exception: MoE expert
-  capacity couples rows — with ``capacity_factor`` routing, outputs are only
-  bit-identical to the oracle while batch composition matches, e.g.
-  simultaneous arrivals with equal budgets.)
+  the per-slot position vector.  Rows whose slot is idle carry stale
+  tokens/positions; slotted idle rows write into their own (dead) batch row,
+  paged idle rows write into the reserved trash block, and batch rows are
+  independent in every model op, so active outputs are unaffected.
+  (Exception: MoE expert capacity couples rows — with ``capacity_factor``
+  routing, outputs are only bit-identical to the oracle while batch
+  composition matches.)
+
+``kv="paged"`` (the tentpole of serve/paged.py) changes three things:
+
+* **admission is block-aware** — a request is admitted while free blocks
+  cover its prefill; block appends during decode are lazy (one block every
+  ``block_size`` ticks per slot), and exhaustion preempts the newest active
+  request back to the queue front (it restarts from prefill — greedy decode
+  makes the replay deterministic).
+* **prefill lengths are bucketed** — prompts prefill at the nearest bucket
+  so the prefill jit compiles at most ``len(buckets)`` distinct shapes
+  instead of one per prompt length.  Token-input families bucket DOWN and
+  feed the remaining prompt tokens through the ordinary batched decode path
+  as *forced* tokens (chunked prefill: exact, since decode recomputes the
+  same K/V the full prefill would have); the embeds-input family — and any
+  token prompt shorter than the smallest bucket — buckets UP with right
+  padding, which causal attention keeps out of positions < prompt_len, and
+  reads its logits at ``prompt_len - 1``.
+* **decode reads K/V through the block table** — the jitted decode step
+  takes the [n_slots, max_blocks] table as an argument; see
+  ``models.attention`` for the gather-based view.
 
 This is the decode regime the paper's compressed N:M format targets: every
 step is a small-batch matvec against the compressed weight stream
 (``kernels.nm_spmv``'s vindexmac dataflow), so keeping slots full converts
-directly into tokens per weight-stream pass.
+directly into tokens per weight-stream pass — and the paged pool keeps them
+full by admitting on bytes, not rows.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -39,6 +57,7 @@ import numpy as np
 from repro.models import (convert_to_compressed, decode_step, init_caches,
                           prefill, weight_stream_bytes)
 from repro.serve.cache import scatter_slot, seed_decode_caches
+from repro.serve.paged import BlockPool, default_buckets
 from repro.serve.request import Request, RequestResult
 from repro.serve.scheduler import SlotScheduler
 
@@ -48,6 +67,9 @@ class _SlotState:
     req: Request
     tokens: List[int]
     admitted_at: int
+    # prompt tokens not yet fed (bucketed-down prefill catch-up); while
+    # non-empty the slot is still consuming its prompt and emits nothing
+    pending: List[int] = dataclasses.field(default_factory=list)
 
 
 class ServeEngine:
@@ -55,12 +77,17 @@ class ServeEngine:
 
     ``compressed=True`` converts the whole model to the compressed N:M
     serving format at init (``models.convert_to_compressed``) and serves
-    from that pool: decode-shaped activations then stream ``w_vals`` + the
-    packed col_idx words through the nm_spmv policy route (token-for-token
-    identical to serving the dense weights, at ~N/M the weight traffic)."""
+    from that pool.  ``kv="paged"`` swaps the slot-per-row cache for the
+    block-pool layout of ``serve.paged`` (``block_size``/``n_blocks``/
+    ``prefill_buckets`` configure it); ``kv="slotted"`` keeps the PR-2
+    layout and remains the token-equality oracle."""
 
     def __init__(self, params, cfg, n_slots: int, max_len: int,
-                 compressed: bool = False):
+                 compressed: bool = False, kv: str = "slotted",
+                 block_size: int = 4, n_blocks: Optional[int] = None,
+                 prefill_buckets: Optional[Sequence[int]] = None):
+        if kv not in ("slotted", "paged"):
+            raise ValueError(f"kv must be 'slotted' or 'paged', got {kv!r}")
         if compressed:
             # serve from the compressed pool: pack every SparseLinear offline
             # (the paper's compress step) and flip the policy to 'compressed'
@@ -74,18 +101,36 @@ class ServeEngine:
         self.cfg = cfg
         self.n_slots = n_slots
         self.max_len = max_len
+        self.kv = kv
         self.scheduler = SlotScheduler(n_slots)
-        self.caches, _ = init_caches(cfg, n_slots, max_len)
         self.pos = np.zeros(n_slots, np.int32)
         self.tok = np.zeros(n_slots, np.int32)
         self.active = np.zeros(n_slots, bool)
         self.results: Dict[int, RequestResult] = {}
         self.decode_steps = 0
+        self.ticks = 0
+        self.preemptions = 0
+        self.prefill_lengths = set()         # distinct compiled prefill seqs
         self._slots: Dict[int, _SlotState] = {}
-        # one jit each: decode re-uses a single (pool-shaped) executable;
-        # prefill compiles per distinct prompt length (real engines bucket).
-        self._decode = jax.jit(lambda p, c, t, pos: decode_step(p, cfg, c, t, pos))
-        self._prefill = jax.jit(lambda p, b: prefill(p, cfg, b))
+        if kv == "paged":
+            self.pool = BlockPool(cfg, n_slots, max_len, block_size, n_blocks)
+            self.caches = None
+            self.prefill_buckets = tuple(sorted(set(
+                prefill_buckets if prefill_buckets is not None
+                else default_buckets(max_len))))
+            self._decode = jax.jit(
+                lambda p, c, t, pos, tbl: decode_step(p, cfg, c, t, pos, tbl))
+            self._prefill = jax.jit(
+                lambda p, b, lp: prefill(p, cfg, b, logit_pos=lp))
+        else:
+            self.pool = None
+            self.prefill_buckets = ()
+            self.caches, _ = init_caches(cfg, n_slots, max_len)
+            # one jit each: decode re-uses a single (pool-shaped) executable;
+            # prefill compiles per distinct prompt length (paged buckets).
+            self._decode = jax.jit(
+                lambda p, c, t, pos: decode_step(p, cfg, c, t, pos))
+            self._prefill = jax.jit(lambda p, b: prefill(p, cfg, b))
 
     # --------------------------------------------------------------- frontend
 
@@ -94,22 +139,112 @@ class ServeEngine:
             raise ValueError(
                 f"request {req.rid}: prompt {req.prompt_len} + gen "
                 f"{req.max_new_tokens} exceeds pool max_len {self.max_len}")
+        if self.kv == "paged":
+            need = self.pool.blocks_for(req.prompt_len + req.max_new_tokens - 1)
+            if need > self.pool.usable_blocks:
+                raise ValueError(
+                    f"request {req.rid}: needs {need} blocks, pool has "
+                    f"{self.pool.usable_blocks} usable")
         self.scheduler.submit(req)
 
-    # -------------------------------------------------------------- admission
+    # ------------------------------------------------------------- admission
+
+    def _plan(self, req: Request) -> "tuple[int, bool]":
+        """Bucketed prefill plan for a request: ``(prefill_len, pad_up)``.
+
+        ``pad_up=False`` — prefill the first ``prefill_len`` prompt tokens
+        and replay the remainder through forced decode steps (token
+        families bucketing DOWN).  ``pad_up=True`` — right-pad the prompt
+        to ``prefill_len``, read logits at ``prompt_len - 1``, seed only
+        the real positions: embeds prompts always (they cannot replay
+        through the token decode step), and token prompts shorter than the
+        smallest bucket (nothing to bucket down to; padding is causal-safe,
+        so this keeps compiled shapes within the bucket set).  A prompt no
+        bucket covers falls back to its exact length."""
+        plen = req.prompt_len
+        if not self.prefill_buckets:
+            return plen, False
+        if not self._pads_up():
+            downs = [b for b in self.prefill_buckets if b <= plen]
+            if downs:
+                return max(downs), False
+        ups = [b for b in self.prefill_buckets if b >= plen]
+        if ups:
+            return min(ups), True
+        return plen, False
+
+    def _pads_up(self) -> bool:
+        # embeds-input prompts cannot be replayed through the token decode
+        # step, so they always bucket UP (causal-safe right padding)
+        return self.cfg.input_mode == "embeds" and self.cfg.family != "audio"
+
+    def _seed_positions(self, req: Request) -> int:
+        """How many prompt positions admission materializes into the cache."""
+        pb, pad_up = self._plan(req)
+        return req.prompt_len if pad_up else pb
+
+    def _fits(self, req: Request) -> bool:
+        return self.pool.can_alloc(
+            self.pool.blocks_for(self._seed_positions(req)))
 
     def _admit(self, slot: int, req: Request, now: int) -> None:
+        if self.kv == "paged":
+            self._admit_paged(slot, req, now)
+            return
+        self.prefill_lengths.add(req.prompt_len)
         batch = {k: jnp.asarray(v)[None] for k, v in req.inputs.items()}
         logits, pf = self._prefill(self.params, batch)
         single, _ = init_caches(self.cfg, 1, self.max_len)
         single = seed_decode_caches(self.cfg, single, pf)
         self.caches = scatter_slot(self.caches, single, slot)
         first = int(jnp.argmax(logits[0]))
-        self._slots[slot] = _SlotState(req=req, tokens=[first], admitted_at=now)
+        self._slots[slot] = _SlotState(req=req, tokens=[first],
+                                       admitted_at=now)
         self.pos[slot] = req.prompt_len
         self.tok[slot] = first
         self.active[slot] = True
         if req.max_new_tokens <= 1:          # satisfied by prefill alone
+            self._retire(slot, now)
+
+    def _admit_paged(self, slot: int, req: Request, now: int) -> None:
+        plen = req.prompt_len
+        pb, pad_up = self._plan(req)
+        n_seed = plen if pad_up else pb
+        if not self.pool.alloc(slot, self.pool.blocks_for(n_seed)):
+            raise RuntimeError("admission without enough free blocks "
+                               "(scheduler fits-gate should prevent this)")
+        # build the bucketed prefill batch: bucket-down truncates the token
+        # prompt (remainder replays through decode), pad-up right-pads the
+        # prompt itself (positions >= plen never reach earlier logits and
+        # are never seeded; encoder inputs are not positions, keep whole)
+        batch = {}
+        for k, v in req.inputs.items():
+            a = jnp.asarray(v)[None]
+            if k == "tokens" and not pad_up:
+                a = a[:, :pb]
+            elif pad_up and k != "enc_embeds" and pb > plen:
+                a = jnp.pad(a, ((0, 0), (0, pb - plen))
+                            + ((0, 0),) * (a.ndim - 2))
+            batch[k] = a
+        self.prefill_lengths.add(pb)
+        lp = (plen if pad_up else pb) - 1
+        logits, pf = self._prefill(self.params, batch,
+                                   jnp.asarray(lp, jnp.int32))
+        self.pool.seed(slot, pf, n_seed)
+        if n_seed >= plen:                   # prompt fully prefilled
+            first = int(jnp.argmax(logits[0]))
+            st = _SlotState(req=req, tokens=[first], admitted_at=now)
+            self.pos[slot] = plen
+            self.tok[slot] = first
+        else:                                # catch up via forced decode
+            toks = np.asarray(req.inputs["tokens"])
+            st = _SlotState(req=req, tokens=[], admitted_at=now,
+                            pending=[int(t) for t in toks[pb + 1:plen]])
+            self.pos[slot] = pb
+            self.tok[slot] = int(toks[pb])
+        self._slots[slot] = st
+        self.active[slot] = True
+        if st.tokens and req.max_new_tokens <= 1:
             self._retire(slot, now)
 
     def _retire(self, slot: int, now: int) -> None:
@@ -119,21 +254,62 @@ class ServeEngine:
             admitted_at=st.admitted_at, finished_at=now)
         self.scheduler.release(slot)
         self.active[slot] = False
+        if self.kv == "paged":
+            self.pool.free(slot)
+            self.pos[slot] = 0               # idle rows write into trash:0
+            self.tok[slot] = 0
+
+    # ------------------------------------------------------------ preemption
+
+    def _preempt(self, slot: int, now: int) -> None:
+        st = self._slots.pop(slot)
+        self.pool.free(slot)
+        self.scheduler.preempt(slot)         # requeued at the FRONT
+        self.active[slot] = False
+        self.pos[slot] = 0
+        self.tok[slot] = 0
+        self.preemptions += 1
+
+    def _grow_blocks(self, now: int) -> None:
+        """Lazily back every active slot's next write position, preempting
+        the newest-admitted request when the free list runs dry (oldest
+        requests are never preempted, so progress is guaranteed)."""
+        for slot in sorted(self._slots,
+                           key=lambda s: (self._slots[s].admitted_at, s)):
+            if slot not in self._slots:      # preempted by an earlier victim
+                continue
+            while not self.pool.ensure(slot, int(self.pos[slot])):
+                victim = max(self._slots,
+                             key=lambda s: (self._slots[s].admitted_at, s))
+                self._preempt(victim, now)
+                if victim == slot:           # the grower itself was newest
+                    break
 
     # ----------------------------------------------------------------- decode
 
     def step(self, now: int) -> None:
         """One batched decode tick over the pool (per-slot positions)."""
-        logits, self.caches = self._decode(
-            self.params, self.caches, jnp.asarray(self.tok),
-            jnp.asarray(self.pos))
+        if self.kv == "paged":
+            self._grow_blocks(now)
+            if not self._slots:
+                return                       # everything was preempted
+            logits, self.pool.caches = self._decode(
+                self.params, self.pool.caches, jnp.asarray(self.tok),
+                jnp.asarray(self.pos), self.pool.device_table())
+        else:
+            logits, self.caches = self._decode(
+                self.params, self.caches, jnp.asarray(self.tok),
+                jnp.asarray(self.pos))
         nxt = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
         self.decode_steps += 1
         for slot in list(self._slots):
             st = self._slots[slot]
+            self.pos[slot] += 1
+            if st.pending:                   # still consuming the prompt
+                self.tok[slot] = st.pending.pop(0)
+                continue
             st.tokens.append(int(nxt[slot]))
             self.tok[slot] = nxt[slot]
-            self.pos[slot] += 1
             if len(st.tokens) >= st.req.max_new_tokens:
                 self._retire(slot, now)
 
@@ -146,22 +322,48 @@ class ServeEngine:
             self.submit(r)
         t = 0
         while self.scheduler.has_work():
-            for slot, req in self.scheduler.admit(t):
-                self._admit(slot, req, t)
+            if self.kv == "paged":
+                # one at a time: each admission allocates blocks, and the
+                # next fits-check must see the shrunken free list
+                while True:
+                    pairs = self.scheduler.admit(t, fits=self._fits, limit=1)
+                    if not pairs:
+                        break
+                    self._admit(pairs[0][0], pairs[0][1], t)
+            else:
+                for slot, req in self.scheduler.admit(t):
+                    self._admit(slot, req, t)
             if self.active.any():
                 self.scheduler.record_occupancy()
                 self.step(t)
             t += 1
+        self.ticks = t
         return self.results
 
     def stats(self) -> Dict[str, float]:
         toks = sum(len(r.tokens) for r in self.results.values())
         ws = self.weight_stream
-        return {"decode_steps": float(self.decode_steps),
-                "occupancy": self.scheduler.occupancy(),
-                "tokens": float(toks),
-                # per-decode-step weight-stream traffic (every step re-reads
-                # each linear once; see models.weight_stream_bytes)
-                "weight_stream_bytes": float(ws["stream_bytes"]),
-                "dense_weight_bytes": float(ws["dense_bytes"]),
-                "weight_stream_ratio": float(ws["ratio"])}
+        out = {"decode_steps": float(self.decode_steps),
+               "occupancy": self.scheduler.occupancy(),
+               "tokens": float(toks),
+               "ticks": float(self.ticks),
+               "prefill_compiles": float(len(self.prefill_lengths)),
+               # per-decode-step weight-stream traffic (every step re-reads
+               # each linear once; see models.weight_stream_bytes)
+               "weight_stream_bytes": float(ws["stream_bytes"]),
+               "dense_weight_bytes": float(ws["dense_bytes"]),
+               "weight_stream_ratio": float(ws["ratio"])}
+        if self.kv == "paged":
+            out.update({
+                "preemptions": float(self.preemptions),
+                "kv_block_bytes": float(self.pool.bytes_per_block),
+                "kv_bytes_resident": float(self.pool.resident_bytes()),
+                "kv_bytes_peak": float(self.pool.peak_blocks
+                                       * self.pool.bytes_per_block),
+                "kv_bytes_capacity": float(self.pool.usable_blocks
+                                           * self.pool.bytes_per_block),
+                "kv_state_bytes": float(self.pool.state_bytes)})
+        else:
+            out["kv_bytes_resident"] = float(sum(
+                l.nbytes for l in jax.tree_util.tree_leaves(self.caches)))
+        return out

@@ -1,0 +1,261 @@
+"""Paged KV-cache pool: block-table indirection for the serve stack.
+
+The slotted pool reserves one whole ``max_len`` batch row per decode slot, so
+a 16-token request pins the same cache memory as a 2048-token one and
+admission stalls on *slots* rather than *bytes*.  ``BlockPool`` replaces that
+layout with the paper's indirection move applied to serving memory: every
+attention-cache leaf becomes a pool of fixed-size blocks
+``[..., n_blocks, block_size, ...]`` and each request owns an int32 block
+table mapping logical position ``p`` to physical block
+``table[slot, p // block_size]`` — the software analog of vindexmac reading
+vector operands through an index stream instead of a dense layout.
+
+Which leaves get paged is detected **structurally**, in the same spirit as
+``cache.scatter_slot``: ``init_caches`` is probed at two max_len values and
+any leaf whose shape changes between them has a sequence axis (the changed
+axis) and is paged; everything else (SSM state, conv tails, encoder cross
+K/V) is slot-indexed exactly as before and scattered with ``scatter_slot``.
+Block 0 is a reserved *trash* block: idle batch rows keep writing somewhere
+harmless (the slotted engine relied on idle rows owning a whole row for the
+same reason), and the table of a freed slot resets to it.
+
+Invariants (property-tested in tests/test_paged.py):
+  * a physical block id is owned by at most one slot (or free) at all times;
+  * ``free`` returns every owned block exactly once (no double-free);
+  * table entries outside a slot's owned prefix always point at block 0;
+  * freed blocks are reusable by later allocations.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import init_caches
+from repro.serve.cache import scatter_slot, seed_decode_caches
+
+TRASH_BLOCK = 0
+
+
+def default_buckets(max_len: int, lo: int = 4) -> Tuple[int, ...]:
+    """Power-of-two prefill buckets up to (and always including) max_len."""
+    out: List[int] = []
+    b = lo
+    while b < max_len:
+        out.append(b)
+        b *= 2
+    out.append(max_len)
+    return tuple(out)
+
+
+def _detect_layout(cfg, n_slots: int):
+    """Probe init_caches at two lengths; a leaf whose shape changes has a
+    sequence axis (the changed axis) and is paged.  Returns (treedef,
+    probe_leaves, seq_axes) with seq_axes[i] = None for slot-indexed leaves.
+    Slot-indexed leaves are max_len-independent by construction (SSM state,
+    conv tails, encoder cross K/V), so the probe leaves themselves serve as
+    their zero templates."""
+    c1, _ = init_caches(cfg, n_slots, 1)
+    c2, _ = init_caches(cfg, n_slots, 2)
+    l1, treedef = jax.tree_util.tree_flatten(c1)
+    l2, _ = jax.tree_util.tree_flatten(c2)
+    axes: List[Optional[int]] = []
+    for a, b in zip(l1, l2):
+        if a.shape == b.shape:
+            axes.append(None)
+            continue
+        diff = [i for i, (x, y) in enumerate(zip(a.shape, b.shape)) if x != y]
+        if len(diff) != 1:
+            raise ValueError(
+                f"paged layout detection: cache leaf changed in more than "
+                f"one axis between probe lengths ({a.shape} vs {b.shape})")
+        axes.append(diff[0])
+    return treedef, l1, axes
+
+
+class BlockPool:
+    """Paged decode-cache pool with per-slot block tables.
+
+    The device tree lives in ``self.caches``; paged leaves are
+    ``[..., n_blocks, block_size, ...]`` (the sequence+batch axes of the
+    slotted layout collapse into the block axes), slot-indexed leaves keep
+    their slotted shape.  The block table is host-side numpy (it is tiny and
+    mutates every tick); the engine ships it to the device per decode step.
+    """
+
+    def __init__(self, cfg, n_slots: int, max_len: int, block_size: int,
+                 n_blocks: Optional[int] = None):
+        if block_size <= 0:
+            raise ValueError(f"need block_size > 0, got {block_size}")
+        if n_slots <= 0:
+            raise ValueError(f"need n_slots > 0, got {n_slots}")
+        self.cfg = cfg
+        self.n_slots = n_slots
+        self.max_len = max_len
+        self.block_size = block_size
+        self.table_width = -(-max_len // block_size)
+        # default: full provisioning (every slot can hold max_len) + trash
+        self.n_blocks = (n_blocks if n_blocks is not None
+                         else n_slots * self.table_width + 1)
+        if self.n_blocks < 2:
+            raise ValueError("need at least 2 blocks (one is reserved trash)")
+
+        self._treedef, probe, self._seq_axes = _detect_layout(cfg, n_slots)
+        leaves = []
+        for leaf, ax in zip(probe, self._seq_axes):
+            if ax is None:
+                leaves.append(leaf)          # slot-indexed zero template
+            else:
+                lead, tail = leaf.shape[:ax - 1], leaf.shape[ax + 1:]
+                leaves.append(jnp.zeros(
+                    lead + (self.n_blocks, block_size) + tail, leaf.dtype))
+        self.caches = jax.tree_util.tree_unflatten(self._treedef, leaves)
+
+        self._staging = None                 # built lazily on first seed
+        self.table = np.zeros((n_slots, self.table_width), np.int32)
+        # pop() hands out the lowest free id first (deterministic traces)
+        self._free: List[int] = list(range(self.n_blocks - 1, 0, -1))
+        self._owned: Dict[int, List[int]] = {s: [] for s in range(n_slots)}
+        self.peak_blocks = 0
+
+    # ------------------------------------------------------------ accounting
+
+    def blocks_for(self, n_positions: int) -> int:
+        return -(-max(n_positions, 0) // self.block_size)
+
+    @property
+    def usable_blocks(self) -> int:
+        return self.n_blocks - 1             # minus the trash block
+
+    @property
+    def free_blocks(self) -> int:
+        return len(self._free)
+
+    @property
+    def used_blocks(self) -> int:
+        return sum(len(v) for v in self._owned.values())
+
+    @property
+    def bytes_per_block(self) -> int:
+        tot = 0
+        for leaf, ax in zip(jax.tree_util.tree_leaves(self.caches),
+                            self._seq_axes):
+            if ax is not None:
+                tot += leaf.nbytes // self.n_blocks
+        return tot
+
+    @property
+    def state_bytes(self) -> int:
+        """Bytes of the slot-indexed (non-paged) leaves."""
+        return sum(leaf.nbytes
+                   for leaf, ax in zip(jax.tree_util.tree_leaves(self.caches),
+                                       self._seq_axes) if ax is None)
+
+    def resident_bytes(self) -> int:
+        """KV bytes actually backing live requests (allocated blocks only)."""
+        return self.used_blocks * self.bytes_per_block
+
+    # ------------------------------------------------------------ alloc/free
+
+    def can_alloc(self, n: int) -> bool:
+        return len(self._free) >= n
+
+    def alloc(self, slot: int, n: int) -> bool:
+        """Append n fresh blocks to ``slot``'s table; False if exhausted."""
+        if len(self._free) < n:
+            return False
+        owned = self._owned[slot]
+        if len(owned) + n > self.table_width:
+            raise ValueError(
+                f"slot {slot}: {len(owned) + n} blocks exceeds table width "
+                f"{self.table_width} (max_len {self.max_len})")
+        for _ in range(n):
+            pid = self._free.pop()
+            self.table[slot, len(owned)] = pid
+            owned.append(pid)
+        self.peak_blocks = max(self.peak_blocks, self.used_blocks)
+        return True
+
+    def ensure(self, slot: int, pos: int) -> bool:
+        """Lazily append blocks until position ``pos`` is backed."""
+        need = pos // self.block_size + 1
+        short = need - len(self._owned[slot])
+        if short <= 0:
+            return True
+        return self.alloc(slot, short)
+
+    def free(self, slot: int) -> None:
+        """Return every block owned by ``slot``; reset its table to trash."""
+        self._free.extend(self._owned[slot])
+        self._free.sort(reverse=True)        # keep lowest-id-first determinism
+        self._owned[slot] = []
+        self.table[slot, :] = TRASH_BLOCK
+
+    def check_invariants(self) -> None:
+        """Raise if the pool bookkeeping is inconsistent (test hook)."""
+        seen = list(self._free)
+        for s, owned in self._owned.items():
+            seen.extend(owned)
+            row = self.table[s]
+            assert list(row[:len(owned)]) == owned, (s, row, owned)
+            assert (row[len(owned):] == TRASH_BLOCK).all(), (s, row)
+        assert sorted(seen) == list(range(1, self.n_blocks)), \
+            "block ids leaked or duplicated"
+
+    # --------------------------------------------------------------- seeding
+
+    def _staging_len(self) -> int:
+        return self.table_width * self.block_size
+
+    def make_staging(self):
+        """The batch-1 staging decode-cache template in *plain* layout:
+        window caps are lifted to the full staging length so windowed (ring)
+        layers come out position-indexed — rings cannot be copied into
+        blocks verbatim.  Built once and reused across admissions
+        (``seed_decode_caches`` is pure, so the zero template survives)."""
+        if self._staging is None:
+            L = self._staging_len()
+            self._staging, _ = init_caches(self.cfg.replace(window=L), 1, L)
+        return self._staging
+
+    def seed(self, slot: int, pf, n_positions: int) -> None:
+        """Write the first ``n_positions`` positions of prefill caches ``pf``
+        (batch 1) into ``slot``: paged leaves go block-by-block through the
+        slot's table (which must already back ``n_positions``), slot-indexed
+        leaves scatter into the slot's batch row."""
+        if self.blocks_for(n_positions) > len(self._owned[slot]):
+            raise RuntimeError(
+                f"seed: slot {slot} owns {len(self._owned[slot])} blocks, "
+                f"needs {self.blocks_for(n_positions)} (admission must alloc "
+                f"before seeding)")
+        staging = seed_decode_caches(self.cfg, self.make_staging(), pf,
+                                     src_len=n_positions)
+        p_leaves, treedef = jax.tree_util.tree_flatten(self.caches)
+        s_leaves = treedef.flatten_up_to(staging)
+        bs = self.block_size
+        nb = self.blocks_for(n_positions)
+        pids = jnp.asarray(self.table[slot, :nb])
+        out = []
+        for pl, sl, ax in zip(p_leaves, s_leaves, self._seq_axes):
+            if ax is None:
+                out.append(scatter_slot(pl, sl, slot))
+                continue
+            # sl: [lead..., 1, L, tail...] -> [lead..., T, bs, tail...]
+            blk_ax = ax - 1
+            sl = jnp.squeeze(sl, axis=blk_ax)
+            shape = sl.shape
+            blocks = sl.reshape(shape[:blk_ax] + (self.table_width, bs)
+                                + shape[blk_ax + 1:])
+            # one scatter per leaf: the slot's owned block ids receive the
+            # first nb staging blocks
+            src = jnp.moveaxis(blocks, blk_ax, 0)[:nb].astype(pl.dtype)
+            pl = jnp.moveaxis(
+                jnp.moveaxis(pl, blk_ax, 0).at[pids].set(src), 0, blk_ax)
+            out.append(pl)
+        self.caches = jax.tree_util.tree_unflatten(treedef, out)
+
+    def device_table(self) -> jnp.ndarray:
+        return jnp.asarray(self.table)

@@ -14,13 +14,20 @@ without touching a model.
 from __future__ import annotations
 
 import collections
-from typing import Deque, Dict, List, Optional, Tuple
+from typing import Callable, Deque, Dict, List, Optional, Tuple
 
 from repro.serve.request import Request
 
 
 class SlotScheduler:
-    """FCFS admission of queued requests into freed decode slots."""
+    """FCFS admission of queued requests into freed decode slots.
+
+    ``admit`` optionally takes a ``fits`` predicate for block-aware admission
+    (the paged KV pool): the head of the queue is admitted only while the
+    resource it needs is available — head-of-line blocking is deliberate, it
+    preserves FCFS completion order.  ``preempt`` evicts an active request
+    back to the *front* of the queue (paged pools preempt-to-queue when the
+    free block list runs dry mid-decode)."""
 
     def __init__(self, n_slots: int):
         if n_slots <= 0:
@@ -36,10 +43,22 @@ class SlotScheduler:
     def submit(self, req: Request) -> None:
         self._queue.append(req)
 
-    def admit(self, now: int) -> List[Tuple[int, Request]]:
-        """Admit arrived requests into free slots; returns (slot, request)."""
+    def admit(self, now: int,
+              fits: Optional[Callable[[Request], bool]] = None,
+              limit: Optional[int] = None) -> List[Tuple[int, Request]]:
+        """Admit arrived requests into free slots; returns (slot, request).
+
+        ``fits(req)`` gates each admission on resource availability (free KV
+        blocks); admission stops at the first queued request that does not
+        fit, keeping FCFS order.  ``limit`` caps admissions per call — a
+        block-aware engine admits one at a time so each admission's
+        allocation is visible to the next ``fits`` check."""
         admitted: List[Tuple[int, Request]] = []
         while self._free and self._queue and self._queue[0].arrival <= now:
+            if limit is not None and len(admitted) >= limit:
+                break
+            if fits is not None and not fits(self._queue[0]):
+                break
             slot = self._free.pop()          # lowest free slot first
             req = self._queue.popleft()
             self._active[slot] = req
@@ -52,6 +71,17 @@ class SlotScheduler:
         del self._active[slot]
         self._free.append(slot)
         self._free.sort(reverse=True)
+
+    def preempt(self, slot: int) -> Request:
+        """Evict ``slot``'s request back to the FRONT of the queue (it will
+        restart from prefill on readmission) and free the slot."""
+        if slot not in self._active:
+            raise KeyError(f"slot {slot} is not active")
+        req = self._active.pop(slot)
+        self._free.append(slot)
+        self._free.sort(reverse=True)
+        self._queue.appendleft(req)
+        return req
 
     # ------------------------------------------------------------------ state
 
@@ -73,7 +103,11 @@ class SlotScheduler:
         self._occupancy.append(len(self._active))
 
     def occupancy(self) -> float:
-        """Mean fraction of slots doing useful work per decode step."""
+        """Mean fraction of slots doing useful work per decode step.
+
+        Zero recorded ticks (a prefill-only trace where every request is
+        satisfied by ``max_new_tokens <= 1`` never runs a decode step)
+        reports 0.0 rather than dividing by zero."""
         if not self._occupancy:
             return 0.0
         return sum(self._occupancy) / (len(self._occupancy) * self.n_slots)
