@@ -1,0 +1,185 @@
+"""Fused vs gather paged-decode attention on the oversubscribed trace.
+
+Both engines serve the SAME equal-KV-byte oversubscribed trace as
+``serve_paged`` (short ragged requests against a block budget sized for
+``paged_slots`` concurrent spans) through the paged block pool; the only
+difference is how decode reads K/V back out of it:
+
+* ``gather`` — ``models.attention._paged_update``: the pool is gathered into
+  a dense position-indexed ``[B, T*bs, ...]`` copy every step, then the
+  ordinary score math runs over it.  The indirection is paid for but the
+  bandwidth win is thrown away — this is the interpret-mode oracle.
+* ``fused``  — ``kernels.flash_attention.paged_gqa_decode`` /
+  ``paged_mla_decode``: the block table rides into the kernel as a
+  scalar-prefetch operand and each grid step DMAs exactly the [block_size, D]
+  tile the table names, with online-softmax state carried across blocks
+  (the software vindexmac on the decode hot path).
+
+The report asserts token-for-token identity and that the fused path finishes
+in no more decode steps than gather (the step count is the scheduler-level
+cost; wall seconds are recorded but not asserted — on CPU the fused kernel
+runs interpreted).  It also emits the per-step KV HBM traffic model
+(``paged_decode_traffic``) showing what the fused walk saves on hardware.
+
+Exits non-zero on token mismatch or a step regression; the CI
+``bench-trajectory`` job runs ``--smoke`` and uploads ``BENCH_5.json``.
+
+Standalone:  PYTHONPATH=src python benchmarks/serve_paged_attn.py [--smoke]
+Also exposes ``run(quick)`` rows for the benchmarks.run CSV harness.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+from typing import Dict, List
+
+import jax
+import numpy as np
+
+try:
+    from benchmarks.common import Row, write_bench
+except ModuleNotFoundError:            # invoked as a script from anywhere
+    import os
+    import sys
+    sys.path.insert(0, os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))))
+    from benchmarks.common import Row, write_bench
+
+# the four serve families (matching serve_paged's equal-KV-byte trace); ssm
+# has no attention cache at all — fused must degrade to a no-op there, which
+# is exactly what the report should show (identical everything)
+FAMILY_ARCHS = {
+    "dense": "llama3.2-1b",
+    "ssm": "falcon-mamba-7b",
+    "hybrid": "zamba2-7b",
+    "audio": "whisper-small",
+}
+
+PROMPTS = (4, 5, 6, 7)
+GENS = (5, 4, 3, 2)
+
+
+def _setup(arch: str, n_requests: int):
+    from repro.configs import get_config
+    from repro.models import init_model
+    from repro.serve import synthetic_request
+    cfg = get_config(arch, smoke=True)
+    cfg = cfg.replace(sparsity=dataclasses.replace(
+        cfg.sparsity, mode="compressed", impl="xla"))
+    params, _ = init_model(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+    reqs = [synthetic_request(cfg, rng, rid=i,
+                              prompt_len=PROMPTS[i % len(PROMPTS)],
+                              max_new_tokens=GENS[i % len(GENS)])
+            for i in range(n_requests)]
+    return cfg, params, reqs
+
+
+def bench_family(arch: str, n_requests: int = 8, max_len: int = 16,
+                 block_size: int = 4, paged_slots: int = 4) -> Dict:
+    from repro.kernels.flash_attention import paged_decode_traffic
+    from repro.serve import ServeEngine
+    cfg, params, reqs = _setup(arch, n_requests)
+    span = max(p + g - 1 for p, g in zip(PROMPTS, GENS))
+    budget_blocks = paged_slots * -(-span // block_size)
+
+    out: Dict = {"arch": arch, "block_size": block_size, "max_len": max_len,
+                 "n_requests": n_requests, "budget_blocks": budget_blocks,
+                 "slots": paged_slots}
+    results: Dict[str, Dict] = {}
+    for attn in ("gather", "fused"):
+        t0 = time.time()
+        eng = ServeEngine(params, cfg, n_slots=paged_slots, max_len=max_len,
+                          kv="paged", block_size=block_size,
+                          n_blocks=budget_blocks + 1, attn=attn)
+        results[attn] = eng.run(reqs)
+        dt = time.time() - t0
+        st = eng.stats()
+        out[attn] = {
+            "tokens": int(st["tokens"]),
+            "ticks": int(st["ticks"]),
+            "decode_steps": int(st["decode_steps"]),
+            "preemptions": int(st["preemptions"]),
+            "occupancy": round(st["occupancy"], 4),
+            "seconds": round(dt, 4),
+        }
+
+    out["token_match"] = all(
+        np.array_equal(results["gather"][r.rid].tokens,
+                       results["fused"][r.rid].tokens) for r in reqs)
+    # scheduler-level cost: the fused read must not change the schedule
+    out["steps_ok"] = (out["fused"]["decode_steps"]
+                       <= out["gather"]["decode_steps"])
+    # per-step KV traffic model at the trace's steady state (all slots at
+    # the full request span) — what the in-kernel walk saves on hardware
+    tw = -(-max_len // block_size)
+    hd = cfg.hd()
+    out["traffic_model"] = paged_decode_traffic(
+        paged_slots, tw, block_size, [span] * paged_slots,
+        cfg.n_kv * hd, cfg.n_kv * hd, dtype_bytes=2)
+    return out
+
+
+def bench(families: List[str], **kw) -> Dict:
+    report = {"bench": "serve_paged_attn", "families": {}, "ok": True}
+    for fam in families:
+        res = bench_family(FAMILY_ARCHS[fam], **kw)
+        report["families"][fam] = res
+        report["ok"] &= res["token_match"] and res["steps_ok"]
+    return report
+
+
+def run(quick: bool = True) -> List[Row]:
+    rows: List[Row] = []
+    rep = bench(["dense"] if quick else list(FAMILY_ARCHS))
+    for fam, r in rep["families"].items():
+        rows.append((f"serve_paged_attn_{fam}", r["fused"]["seconds"] * 1e6,
+                     f"steps{r['fused']['decode_steps']}"
+                     f"vs{r['gather']['decode_steps']}|"
+                     f"kvx{r['traffic_model']['ratio']:.2f}|"
+                     f"match{int(r['token_match'])}"))
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--families", default="dense,ssm,hybrid,audio",
+                    help="comma list from {%s}" % ",".join(FAMILY_ARCHS))
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--block-size", type=int, default=4)
+    ap.add_argument("--max-len", type=int, default=16)
+    ap.add_argument("--paged-slots", type=int, default=4)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny CI iteration (6 requests)")
+    ap.add_argument("--out", default="BENCH_5.json")
+    args = ap.parse_args()
+
+    fams = [f.strip() for f in args.families.split(",") if f.strip()]
+    for f in fams:
+        if f not in FAMILY_ARCHS:
+            raise SystemExit(f"unknown family {f!r}; known: {list(FAMILY_ARCHS)}")
+    kw = dict(n_requests=6 if args.smoke else args.requests,
+              max_len=args.max_len, block_size=args.block_size,
+              paged_slots=args.paged_slots)
+
+    report = bench(fams, **kw)
+    for fam, r in report["families"].items():
+        g, fu, tm = r["gather"], r["fused"], r["traffic_model"]
+        print(f"{fam:>7} ({r['arch']}): "
+              f"decode steps {fu['decode_steps']} fused vs "
+              f"{g['decode_steps']} gather | "
+              f"KV bytes/step model {tm['fused_bytes']}/{tm['gather_bytes']} "
+              f"({tm['ratio']:.2f}x) | "
+              f"tokens {'MATCH' if r['token_match'] else 'MISMATCH'}")
+
+    write_bench(report, args.out)
+    if not report["ok"]:
+        raise SystemExit("fused paged-decode attention failed an invariant "
+                         "(token mismatch vs the gather oracle, or a "
+                         "decode-step regression)")
+
+
+if __name__ == "__main__":
+    main()

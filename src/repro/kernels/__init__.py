@@ -8,4 +8,6 @@ nm_spmv: VMEM-resident activations + indirect gather-MAC (decode regime —
 from repro.kernels import ops, ref
 from repro.kernels.nm_spmm import nm_spmm_kernel, nm_xwt_kernel
 from repro.kernels.nm_spmv import nm_spmv_kernel
-from repro.kernels.flash_attention import flash_attention_kernel, flash_traffic
+from repro.kernels.flash_attention import (flash_attention_kernel,
+                                           flash_traffic, paged_decode_traffic,
+                                           paged_gqa_decode, paged_mla_decode)

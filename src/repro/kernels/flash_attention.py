@@ -12,6 +12,24 @@ wrapper).  Grid (BH, q_blocks, kv_blocks); kv is the innermost (sequential)
 axis with m/l/acc scratch carried across kv steps.  Causal masking skips
 nothing structurally (blocks above the diagonal still run, fully masked) —
 block-skipping is a further optimization left measured in §Perf.
+
+Causal-mask anchor (``q_off``): query row i of a [BH, Sq, D] call is masked
+at absolute position ``q_off + i``, and key column j at absolute position
+``j`` — so ``q_off`` is where the query window starts inside the key
+sequence.  The default ``q_off = Sk - Sq`` places the queries at the
+*suffix* of the keys, which covers both training (Sq == Sk, q_off == 0) and
+the serve stack's bucketed prefill: a prompt bucketed DOWN to ``pb`` tokens
+prefills positions [0, pb) with q_off == 0, and the forced-decode replay of
+the remaining ``Sq = plen - pb`` tokens attends over all ``Sk = plen``
+positions with q_off == pb — nonzero, and exactly Sk - Sq.  Pass ``q_off=``
+explicitly only to break that suffix assumption (it shifts every query's
+causal/window anchor; keys are always at positions [0, Sk)).
+
+``paged_gqa_decode`` / ``paged_mla_decode`` are the decode-side siblings:
+flash-decoding over a *paged* KV pool, resolving the per-slot block table
+inside the kernel (scalar-prefetch index maps — the true software vindexmac:
+indexed reads feeding the MAC loop) instead of gathering the pool into a
+dense position-indexed copy first.
 """
 
 from __future__ import annotations
@@ -78,9 +96,15 @@ def flash_attention_kernel(q: jax.Array, k: jax.Array, v: jax.Array, *,
                            cap: Optional[float] = None,
                            scale: Optional[float] = None,
                            block: Tuple[int, int] = DEFAULT_BLOCK_FA,
+                           q_off: Optional[int] = None,
                            interpret: bool = False) -> jax.Array:
     """q [BH, Sq, D], k [BH, Sk, D], v [BH, Sk, Dv] -> [BH, Sq, Dv].
-    Sq/Sk must divide by the block sizes (ops wrapper pads)."""
+    Sq/Sk must divide by the block sizes (ops wrapper pads).
+
+    ``q_off`` anchors the causal/window mask: query row i sits at absolute
+    position ``q_off + i`` against keys at positions [0, Sk).  Default
+    ``Sk - Sq`` (queries are the key suffix) — the semantics the bucketed
+    prefill's forced-decode replay relies on (see module docstring)."""
     bh, sq, d = q.shape
     _, sk, dv = v.shape
     bq, bk = block
@@ -91,7 +115,8 @@ def flash_attention_kernel(q: jax.Array, k: jax.Array, v: jax.Array, *,
     return pl.pallas_call(
         functools.partial(_fa_body, scale=scale, causal=causal, window=window,
                           cap=cap, bq=bq, bk=bk, k_steps=k_steps,
-                          q_off=sk - sq, out_dtype=q.dtype),
+                          q_off=sk - sq if q_off is None else q_off,
+                          out_dtype=q.dtype),
         grid=grid,
         in_specs=[
             pl.BlockSpec((1, bq, d), lambda b, i, j: (b, i, 0)),
@@ -109,6 +134,222 @@ def flash_attention_kernel(q: jax.Array, k: jax.Array, v: jax.Array, *,
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(q, k, v)
+
+
+# ===================================================== paged-decode attention
+#
+# Flash-decoding over the serve stack's paged KV pool (serve.paged.BlockPool):
+# one query token per slot, K/V living in [n_blocks, block_size, ...] pools
+# addressed through per-slot int32 block tables.  The gather path
+# (models.attention._paged_update) materializes each slot's stream back into
+# a dense [B, T*bs, ...] layout before the math — paying HBM for the whole
+# table span per leaf per step.  These kernels instead walk the table INSIDE
+# the kernel: the block table and per-slot kv lengths ride in as
+# scalar-prefetch operands, so the BlockSpec index map resolves
+# ``table[slot, j]`` to a physical [block_size, D] tile and the pipeline DMAs
+# exactly the blocks a slot owns, while m/l/acc online-softmax state carries
+# across the kv-block grid axis (same formulation as _fa_body above).  The
+# trailing partial block is masked against ``kv_len`` — positions at and
+# beyond a slot's length (including everything a trash-block tile holds)
+# contribute exp(-inf) = 0.
+
+
+def _paged_gqa_body(tbl_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
+                    m_ref, l_ref, acc_ref, *, bs: int, t_steps: int,
+                    scale: float, window: Optional[int],
+                    cap: Optional[float]):
+    b = pl.program_id(0)
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)               # [G, d]
+    k = k_ref[0, :, 0].astype(jnp.float32)            # [bs, d]
+    v = v_ref[0, :, 0].astype(jnp.float32)            # [bs, dv]
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    if cap is not None:
+        s = cap * jnp.tanh(s / cap)
+
+    kv_len = len_ref[b]
+    kpos = j * bs + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    mask = kpos < kv_len
+    if window is not None:
+        mask &= kpos > kv_len - 1 - window
+    s = jnp.where(mask, s, _NEG)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1))
+    p = jnp.where(mask, jnp.exp(s - m_new[:, None]), 0.0)
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + p.sum(axis=-1)
+    acc_ref[...] = acc_ref[...] * corr[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(j == t_steps - 1)
+    def _store():
+        o_ref[0, 0] = acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)[:, None]
+
+
+def paged_gqa_decode(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
+                     block_table: jax.Array, kv_len: jax.Array, *,
+                     scale: Optional[float] = None,
+                     window: Optional[int] = None,
+                     cap: Optional[float] = None,
+                     interpret: bool = False) -> jax.Array:
+    """Fused paged GQA decode: q [B, KVH, G, d] (one token per slot, grouped
+    by kv head), k_pool/v_pool [n_blocks, bs, KVH, d|dv], block_table int32
+    [B, T], kv_len int32 [B] (valid positions per slot, current token
+    included) -> [B, KVH, G, dv] float32.
+
+    Grid (B, KVH, T): kv blocks are the innermost sequential axis; block j of
+    slot b is fetched from physical block ``block_table[b, j]`` via the
+    scalar-prefetched index map, so only pool blocks a slot's table names are
+    ever read (trash-block tiles beyond ``kv_len`` are fetched but fully
+    masked)."""
+    b, kvh, g, d = q.shape
+    nb, bs = k_pool.shape[:2]
+    dv = v_pool.shape[-1]
+    t = block_table.shape[1]
+    scale = scale if scale is not None else d ** -0.5
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, kvh, t),
+        in_specs=[
+            pl.BlockSpec((1, 1, g, d), lambda b, h, j, tbl, lens: (b, h, 0, 0)),
+            pl.BlockSpec((1, bs, 1, d),
+                         lambda b, h, j, tbl, lens: (tbl[b, j], 0, h, 0)),
+            pl.BlockSpec((1, bs, 1, dv),
+                         lambda b, h, j, tbl, lens: (tbl[b, j], 0, h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, dv),
+                               lambda b, h, j, tbl, lens: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((g,), jnp.float32),
+            pltpu.VMEM((g,), jnp.float32),
+            pltpu.VMEM((g, dv), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(_paged_gqa_body, bs=bs, t_steps=t, scale=scale,
+                          window=window, cap=cap),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, kvh, g, dv), jnp.float32),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(block_table, kv_len, q, k_pool, v_pool)
+
+
+def _paged_mla_body(tbl_ref, len_ref, ql_ref, qp_ref, c_ref, p_ref, o_ref,
+                    m_ref, l_ref, acc_ref, *, bs: int, t_steps: int,
+                    scale: float):
+    b = pl.program_id(0)
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    ql = ql_ref[0].astype(jnp.float32)                # [H, r]
+    qp = qp_ref[0].astype(jnp.float32)                # [H, rd]
+    ckv = c_ref[0].astype(jnp.float32)                # [bs, r]
+    kpe = p_ref[0].astype(jnp.float32)                # [bs, rd]
+    # absorbed scores: latent + rope contributions, both against the pool
+    s = (jax.lax.dot_general(ql, ckv, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+         + jax.lax.dot_general(qp, kpe, (((1,), (1,)), ((), ())),
+                               preferred_element_type=jnp.float32)) * scale
+
+    kpos = j * bs + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    mask = kpos < len_ref[b]
+    s = jnp.where(mask, s, _NEG)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1))
+    p = jnp.where(mask, jnp.exp(s - m_new[:, None]), 0.0)
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + p.sum(axis=-1)
+    # the value stream IS the latent cache (MLA's absorbed formulation)
+    acc_ref[...] = acc_ref[...] * corr[:, None] + jax.lax.dot_general(
+        p, ckv, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(j == t_steps - 1)
+    def _store():
+        o_ref[0] = acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)[:, None]
+
+
+def paged_mla_decode(q_lat: jax.Array, q_pe: jax.Array, ckv_pool: jax.Array,
+                     kpe_pool: jax.Array, block_table: jax.Array,
+                     kv_len: jax.Array, *, scale: float,
+                     interpret: bool = False) -> jax.Array:
+    """Fused paged MLA (absorbed) decode: q_lat [B, H, r] (queries already
+    down-projected into the latent space), q_pe [B, H, rd], ckv_pool
+    [n_blocks, bs, r], kpe_pool [n_blocks, bs, rd], block_table int32 [B, T],
+    kv_len int32 [B] -> latent context [B, H, r] float32 (caller up-projects
+    through wuv).
+
+    Same online-softmax-over-table-walk as paged_gqa_decode, with the MLA
+    twist that scores sum a latent and a rope dot and the value operand is
+    the latent cache itself — the whole kernel runs in the compressed
+    kv_lora space (SNIPPETS.md Snippet 3's mla_decode formulation)."""
+    b, h, r = q_lat.shape
+    rd = q_pe.shape[-1]
+    nb, bs = ckv_pool.shape[:2]
+    t = block_table.shape[1]
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, t),
+        in_specs=[
+            pl.BlockSpec((1, h, r), lambda b, j, tbl, lens: (b, 0, 0)),
+            pl.BlockSpec((1, h, rd), lambda b, j, tbl, lens: (b, 0, 0)),
+            pl.BlockSpec((1, bs, r),
+                         lambda b, j, tbl, lens: (tbl[b, j], 0, 0)),
+            pl.BlockSpec((1, bs, rd),
+                         lambda b, j, tbl, lens: (tbl[b, j], 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, h, r), lambda b, j, tbl, lens: (b, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((h,), jnp.float32),
+            pltpu.VMEM((h,), jnp.float32),
+            pltpu.VMEM((h, r), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(_paged_mla_body, bs=bs, t_steps=t, scale=scale),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, h, r), jnp.float32),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(block_table, kv_len, q_lat, q_pe, ckv_pool, kpe_pool)
+
+
+def paged_decode_traffic(b: int, table_width: int, block_size: int,
+                         kv_lens, d: int, dv: int, *,
+                         dtype_bytes: int = 2) -> dict:
+    """Per-step KV HBM traffic model, fused vs gather (for BENCH_5 and the
+    roofline): the gather path materializes every slot's full table span as a
+    dense copy (pool read + copy write + attention read = 3 passes over
+    T*bs positions per slot); the fused walk reads each owned block once —
+    ceil(kv_len/bs)*bs positions per slot, no copy."""
+    span = table_width * block_size
+    per_pos = (d + dv) * dtype_bytes
+    gather = 3 * b * span * per_pos
+    fused = sum(-(-int(l) // block_size) * block_size for l in kv_lens) \
+        * per_pos
+    return dict(gather_bytes=gather, fused_bytes=fused,
+                ratio=fused / max(gather, 1))
 
 
 def flash_traffic(bh: int, sq: int, sk: int, d: int, dv: int, *,

@@ -15,6 +15,11 @@ at ~M/N the decode weight traffic.  ``--kv paged`` swaps the slot-per-row
 cache for the block-pool layout of ``repro.serve.paged`` (block-table
 indirection, block-aware admission, bucketed prefill); ``--kv slotted``
 (the default) keeps the PR-2 layout and is the token-equality oracle.
+``--attn fused`` (paged only) reads the KV pool through the flash-decoding
+Pallas kernel that walks the block table in-kernel; ``--attn gather`` (the
+default) materializes each slot's stream into a dense layout first and is
+the oracle the fused path is tested against (see docs/serve.md, "decode
+attention paths").
 ``serve`` is kept as the PR-1 API (fixed batch of identical requests) for
 the examples and the integration tests.
 """
@@ -83,6 +88,12 @@ def main() -> None:
                     help="'paged' serves through the block-table KV pool "
                          "(continuous scheduler only); 'slotted' is the "
                          "whole-row oracle layout")
+    ap.add_argument("--attn", default="gather", choices=["gather", "fused"],
+                    help="paged decode attention read: 'fused' walks the "
+                         "block table inside the flash-decoding kernel "
+                         "(in-kernel indexed K/V tile loads, online softmax "
+                         "over blocks); 'gather' is the dense-gather oracle "
+                         "(requires --kv paged for 'fused')")
     ap.add_argument("--block-size", type=int, default=8,
                     help="paged pool: positions per KV block")
     ap.add_argument("--blocks", type=int, default=0,
@@ -105,10 +116,10 @@ def main() -> None:
         eng = ServeEngine(params, cfg, n_slots=args.slots, max_len=max_len,
                           compressed=compressed, kv=args.kv,
                           block_size=args.block_size,
-                          n_blocks=args.blocks or None)
+                          n_blocks=args.blocks or None, attn=args.attn)
         results = eng.run(reqs)
         st = eng.stats()
-        print(f"continuous[{args.weights},{args.kv}]: "
+        print(f"continuous[{args.weights},{args.kv},{args.attn}]: "
               f"{int(st['tokens'])} tokens in "
               f"{int(st['decode_steps'])} decode steps, "
               f"occupancy {st['occupancy']:.2f}, "
@@ -123,6 +134,10 @@ def main() -> None:
         if args.kv == "paged":
             raise SystemExit("--kv paged requires --scheduler continuous "
                              "(the sequential oracle is slotted by design)")
+        if args.attn == "fused":
+            raise SystemExit("--attn fused requires --kv paged with "
+                             "--scheduler continuous (the fused kernel reads "
+                             "through the block table)")
         if compressed:
             params = convert_to_compressed(params, cfg)
             cfg = cfg.replace(sparsity=dataclasses.replace(

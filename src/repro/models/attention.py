@@ -19,11 +19,18 @@ import jax.numpy as jnp
 
 from repro.core.sparse_matmul import dense_forward_view, _decompress_xla
 from repro.dist.api import constrain
+from repro.kernels.flash_attention import paged_gqa_decode, paged_mla_decode
 from repro.models.common import (Params, apply_rope, rope_angles, softcap,
                                  sp_linear_apply, sp_linear_init)
 from repro.models.config import ArchConfig
 
 _NEG = -1e30
+
+
+def _pallas_interpret() -> bool:
+    """Fused decode kernels run natively on TPU, interpreted elsewhere (the
+    CPU serve/test path).  Resolved at trace time, inside jit."""
+    return jax.default_backend() != "tpu"
 
 
 def _pick_chunk(s: int, want: int) -> int:
@@ -140,31 +147,42 @@ def gqa_cache_init(cfg: ArchConfig, batch: int, max_len: int, dtype,
     return ({"k": z, "v": z}, {"k": spec, "v": spec})
 
 
-def _paged_update(cache, updates, block_table, cache_pos):
-    """Write one new token per batch row through the block table and gather
-    each row's stream back in logical order.
+def _paged_write(cache, updates, block_table, cache_pos):
+    """Write one new token per batch row through the block table.
 
     Cache leaves are block pools ``[n_blocks, block_size, ...]``; row r's
     token at position p lives at physical block
     ``block_table[r, p // block_size]``, offset ``p % block_size`` — the
     software analog of the paper's indexed register reads (``cache_pos``
     must be the int32 [B] per-slot vector).  ``updates`` maps leaf name to
-    that row's new value ([B, ...], no seq axis).  Returns
-    ``(new_cache, reads, length)`` with ``reads[name]`` in the plain
-    position-indexed layout ``[B, table_width * block_size, ...]`` the
-    non-paged score path expects."""
+    that row's new value ([B, ...], no seq axis)."""
     bsz = next(iter(cache.values())).shape[1]
     posv = jnp.reshape(cache_pos, (-1,))
     blk = block_table[jnp.arange(posv.shape[0]), posv // bsz]
     off = posv % bsz
+    return {name: cache[name].at[blk, off].set(val.astype(cache[name].dtype))
+            for name, val in updates.items()}
+
+
+def _paged_update(cache, updates, block_table, cache_pos):
+    """``_paged_write`` + gather each row's stream back in logical order:
+    returns ``(new_cache, reads, length)`` with ``reads[name]`` in the plain
+    position-indexed layout ``[B, table_width * block_size, ...]`` the
+    non-paged score path expects.  This is the gather read path — the
+    interpret-mode oracle the fused kernels are tested against; it pays the
+    indirection AND a dense materialization of the whole table span."""
+    bsz = next(iter(cache.values())).shape[1]
+    b = jnp.reshape(cache_pos, (-1,)).shape[0]
     length = block_table.shape[1] * bsz
-    new, reads = {}, {}
-    for name, val in updates.items():
-        c = cache[name].at[blk, off].set(val.astype(cache[name].dtype))
-        new[name] = c
-        reads[name] = c[block_table].reshape(
-            (posv.shape[0], length) + c.shape[2:])
+    new = _paged_write(cache, updates, block_table, cache_pos)
+    reads = {name: c[block_table].reshape((b, length) + c.shape[2:])
+             for name, c in new.items()}
     return new, reads, length
+
+
+def _paged_kv_len(cache_pos) -> jax.Array:
+    """Valid positions per slot, the just-written token included."""
+    return jnp.reshape(cache_pos, (-1,)).astype(jnp.int32) + 1
 
 
 def gqa_apply(p: Params, x: jax.Array, cfg: ArchConfig, *,
@@ -183,7 +201,10 @@ def gqa_apply(p: Params, x: jax.Array, cfg: ArchConfig, *,
     block pool [n_blocks, block_size, kv, hd]: row r's token at position p
     lives at physical block ``block_table[r, p // block_size]``, offset
     ``p % block_size`` — the block-table indirection of ``serve.paged``
-    (cache_pos must be the [B] per-slot vector in this mode)."""
+    (cache_pos must be the [B] per-slot vector in this mode).  How the pool
+    is *read* is ``cfg.attn_impl``: 'gather' materializes each row's stream
+    into a dense layout first (the oracle), 'fused' walks the table inside
+    ``kernels.flash_attention.paged_gqa_decode``."""
     b, s, d = x.shape
     h, kv, hd = cfg.n_heads, cfg.n_kv, cfg.hd()
     sp = cfg.sparsity
@@ -212,11 +233,24 @@ def gqa_apply(p: Params, x: jax.Array, cfg: ArchConfig, *,
                               q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk,
                               chain_bf16=cfg.attn_chain_bf16)
         new_kv = {"k": k, "v": v} if return_kv else None
+    elif block_table is not None and cfg.attn_impl == "fused":
+        # fused paged decode: write through the table, then let the Pallas
+        # flash-decoding kernel walk the table itself — the pool is never
+        # materialized into a dense position-indexed copy (the bandwidth
+        # win the gather path below throws away)
+        new_kv = _paged_write(cache, {"k": k[:, 0], "v": v[:, 0]},
+                              block_table, cache_pos)
+        o = paged_gqa_decode(q.reshape(b, kv, h // kv, hd),
+                             new_kv["k"], new_kv["v"], block_table,
+                             _paged_kv_len(cache_pos), scale=hd ** -0.5,
+                             window=window, cap=cfg.softcap_attn,
+                             interpret=_pallas_interpret())
+        o = o.reshape(b, 1, h, hd).astype(x.dtype)
     else:
         if block_table is not None:
-            # paged decode: write through the table, read the pool back via
-            # gather so the score einsum sees the same plain [B, T*bs, kv,
-            # hd] layout the slotted path uses (see _paged_update)
+            # paged decode, gather read: write through the table, read the
+            # pool back via gather so the score einsum sees the same plain
+            # [B, T*bs, kv, hd] layout the slotted path uses (_paged_update)
             new_kv, reads, length = _paged_update(
                 cache, {"k": k[:, 0], "v": v[:, 0]}, block_table, cache_pos)
             k_read, v_read = reads["k"], reads["v"]
@@ -334,9 +368,18 @@ def mla_apply(p: Params, x: jax.Array, cfg: ArchConfig, *,
         # absorbed decode: scores/outputs computed in the latent space —
         # the cache stays [kv_lora + rope] per token (MLA's memory win).
         # cache_pos: scalar, or [B] per-slot positions (continuous batching).
-        if block_table is not None:
-            # paged absorbed decode: latent cache leaves are block pools
-            # [n_blocks, bs, r]; same indirection as GQA (see _paged_update)
+        fused = block_table is not None and cfg.attn_impl == "fused"
+        if fused:
+            # fused paged absorbed decode: write through the table, walk it
+            # inside the kernel — scores, softmax, and the latent context
+            # never leave VMEM (see paged_mla_decode)
+            new_kv = _paged_write(cache, {"ckv": ckv[:, 0], "kpe": kpe[:, 0]},
+                                  block_table, cache_pos)
+            cc_read = cp_read = None
+        elif block_table is not None:
+            # paged absorbed decode, gather read: latent cache leaves are
+            # block pools [n_blocks, bs, r]; same indirection as GQA
+            # (see _paged_update)
             new_kv, reads, _ = _paged_update(
                 cache, {"ckv": ckv[:, 0], "kpe": kpe[:, 0]}, block_table,
                 cache_pos)
@@ -363,15 +406,21 @@ def mla_apply(p: Params, x: jax.Array, cfg: ArchConfig, *,
         wuv3 = wuv_dense.reshape(h, vd, cfg.kv_lora)
         qlat = jnp.einsum("bhd,hdr->bhr", qn[:, 0].astype(jnp.float32),
                           wuk3.astype(jnp.float32))
-        sc = jnp.einsum("bhr,blr->bhl", qlat, cc_read.astype(jnp.float32))
-        sc += jnp.einsum("bhd,bld->bhl", qpe[:, 0].astype(jnp.float32),
-                         cp_read.astype(jnp.float32))
-        sc *= scale
-        idx = jnp.arange(cc_read.shape[1])[None, :]
-        posb = jnp.reshape(cache_pos, (-1, 1))          # [B, 1] or [1, 1]
-        sc = jnp.where((idx <= posb)[:, None, :], sc, _NEG)
-        pr = jax.nn.softmax(sc, axis=-1)
-        ov = jnp.einsum("bhl,blr->bhr", pr, cc_read.astype(jnp.float32))
+        if fused:
+            ov = paged_mla_decode(qlat, qpe[:, 0].astype(jnp.float32),
+                                  new_kv["ckv"], new_kv["kpe"], block_table,
+                                  _paged_kv_len(cache_pos), scale=scale,
+                                  interpret=_pallas_interpret())
+        else:
+            sc = jnp.einsum("bhr,blr->bhl", qlat, cc_read.astype(jnp.float32))
+            sc += jnp.einsum("bhd,bld->bhl", qpe[:, 0].astype(jnp.float32),
+                             cp_read.astype(jnp.float32))
+            sc *= scale
+            idx = jnp.arange(cc_read.shape[1])[None, :]
+            posb = jnp.reshape(cache_pos, (-1, 1))      # [B, 1] or [1, 1]
+            sc = jnp.where((idx <= posb)[:, None, :], sc, _NEG)
+            pr = jax.nn.softmax(sc, axis=-1)
+            ov = jnp.einsum("bhl,blr->bhr", pr, cc_read.astype(jnp.float32))
         o = jnp.einsum("bhr,hdr->bhd", ov, wuv3.astype(jnp.float32))
         o = o.reshape(b, 1, h, vd).astype(x.dtype)
 

@@ -41,6 +41,12 @@ class ArchConfig:
     post_norms: bool = False                 # gemma2: post-sublayer norms
     gemma_norm: bool = False                 # zero-centered RMSNorm scale
     mla: bool = False
+    # paged-decode attention read path: 'gather' materializes each slot's
+    # block stream back into a dense position-indexed copy before the math
+    # (the interpret-mode oracle), 'fused' walks the block table inside the
+    # Pallas flash-decoding kernel (kernels.flash_attention.paged_*_decode).
+    # Only consulted when decode runs with a block_table.
+    attn_impl: str = "gather"
     kv_lora: int = 512
     qk_nope_dim: int = 128
     qk_rope_dim: int = 64

@@ -764,7 +764,8 @@ def init_caches(cfg: ArchConfig, batch: int, max_len: int):
 
 
 def decode_step(p, cfg: ArchConfig, caches, tokens: jax.Array, pos: jax.Array,
-                block_table: Optional[jax.Array] = None):
+                block_table: Optional[jax.Array] = None,
+                attn_impl: Optional[str] = None):
     """One token: tokens [B] int32 -> (logits [B, V], caches).
 
     pos is either a scalar int32 (the whole batch decodes at one position —
@@ -778,7 +779,14 @@ def decode_step(p, cfg: ArchConfig, caches, tokens: jax.Array, pos: jax.Array,
     caches to the paged block-pool layout of ``serve.paged``: leaves are
     [..., n_blocks, block_size, ...] and row r's position p resolves to
     physical block ``block_table[r, p // block_size]``.  Requires the [B]
-    per-slot pos vector."""
+    per-slot pos vector.
+
+    attn_impl ('gather' | 'fused', optional) overrides ``cfg.attn_impl`` for
+    the paged read: 'gather' pulls the pool back into a dense layout before
+    the score math (the oracle), 'fused' resolves the table inside the
+    flash-decoding kernel.  Ignored without a block_table."""
+    if attn_impl is not None and attn_impl != cfg.attn_impl:
+        cfg = cfg.replace(attn_impl=attn_impl)
     x = embed_apply(p["embed"], tokens[:, None])
     if cfg.scale_embeds:
         x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)

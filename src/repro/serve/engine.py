@@ -80,14 +80,25 @@ class ServeEngine:
     from that pool.  ``kv="paged"`` swaps the slot-per-row cache for the
     block-pool layout of ``serve.paged`` (``block_size``/``n_blocks``/
     ``prefill_buckets`` configure it); ``kv="slotted"`` keeps the PR-2
-    layout and remains the token-equality oracle."""
+    layout and remains the token-equality oracle.  ``attn="fused"`` (paged
+    only) reads the pool through the in-kernel block-table walk of
+    ``kernels.flash_attention``; ``attn="gather"`` is the dense-gather
+    oracle read.  ``debug_invariants=True`` cross-checks the block tables
+    against the pool free list before every decode tick."""
 
     def __init__(self, params, cfg, n_slots: int, max_len: int,
                  compressed: bool = False, kv: str = "slotted",
                  block_size: int = 4, n_blocks: Optional[int] = None,
-                 prefill_buckets: Optional[Sequence[int]] = None):
+                 prefill_buckets: Optional[Sequence[int]] = None,
+                 attn: str = "gather", debug_invariants: bool = False):
         if kv not in ("slotted", "paged"):
             raise ValueError(f"kv must be 'slotted' or 'paged', got {kv!r}")
+        if attn not in ("gather", "fused"):
+            raise ValueError(f"attn must be 'gather' or 'fused', got {attn!r}")
+        if attn == "fused" and kv != "paged":
+            raise ValueError("attn='fused' requires kv='paged' (the fused "
+                             "kernel reads through the block table; the "
+                             "slotted layout has none)")
         if compressed:
             # serve from the compressed pool: pack every SparseLinear offline
             # (the paper's compress step) and flip the policy to 'compressed'
@@ -102,6 +113,8 @@ class ServeEngine:
         self.n_slots = n_slots
         self.max_len = max_len
         self.kv = kv
+        self.attn = attn
+        self.debug_invariants = debug_invariants
         self.scheduler = SlotScheduler(n_slots)
         self.pos = np.zeros(n_slots, np.int32)
         self.tok = np.zeros(n_slots, np.int32)
@@ -119,7 +132,8 @@ class ServeEngine:
                 prefill_buckets if prefill_buckets is not None
                 else default_buckets(max_len))))
             self._decode = jax.jit(
-                lambda p, c, t, pos, tbl: decode_step(p, cfg, c, t, pos, tbl))
+                lambda p, c, t, pos, tbl: decode_step(p, cfg, c, t, pos, tbl,
+                                                      attn_impl=attn))
             self._prefill = jax.jit(
                 lambda p, b, lp: prefill(p, cfg, b, logit_pos=lp))
         else:
@@ -293,6 +307,12 @@ class ServeEngine:
             self._grow_blocks(now)
             if not self._slots:
                 return                       # everything was preempted
+            if self.debug_invariants:
+                # the fused kernel reads exactly the blocks the table names:
+                # prove every active slot's read window is backed by owned,
+                # non-free, non-trash blocks before launching it
+                self.pool.check_invariants(
+                    active_pos={s: int(self.pos[s]) for s in self._slots})
             logits, self.pool.caches = self._decode(
                 self.params, self.pool.caches, jnp.asarray(self.tok),
                 jnp.asarray(self.pos), self.pool.device_table())

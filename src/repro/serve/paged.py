@@ -194,16 +194,41 @@ class BlockPool:
         self._owned[slot] = []
         self.table[slot, :] = TRASH_BLOCK
 
-    def check_invariants(self) -> None:
-        """Raise if the pool bookkeeping is inconsistent (test hook)."""
+    def check_invariants(self, active_pos: Optional[Dict[int, int]] = None
+                         ) -> None:
+        """Raise if the pool bookkeeping is inconsistent (test/debug hook).
+
+        Always checked: every block id is exactly once in (free list) union
+        (some slot's owned list); each table row is its owner's block ids
+        followed by trash; no owned prefix entry is free or trash (the
+        cross-check against the free list — a table pointing at a freed or
+        trash block is exactly the read-after-free the fused kernel's
+        in-kernel table walk must never see).
+
+        ``active_pos`` (slot -> current decode position) additionally proves
+        each active slot's whole read window is backed: positions
+        [0, pos] resolve through owned blocks only."""
+        free = set(self._free)
+        assert len(free) == len(self._free), "free list holds duplicates"
+        assert TRASH_BLOCK not in free, "trash block leaked into free list"
         seen = list(self._free)
         for s, owned in self._owned.items():
             seen.extend(owned)
             row = self.table[s]
             assert list(row[:len(owned)]) == owned, (s, row, owned)
             assert (row[len(owned):] == TRASH_BLOCK).all(), (s, row)
+            for pid in owned:
+                assert pid != TRASH_BLOCK, f"slot {s} owns the trash block"
+                assert pid not in free, \
+                    f"slot {s} table names freed block {pid} (read-after-free)"
         assert sorted(seen) == list(range(1, self.n_blocks)), \
             "block ids leaked or duplicated"
+        for s, pos in (active_pos or {}).items():
+            need = self.blocks_for(pos + 1)
+            assert need <= len(self._owned[s]), (
+                f"slot {s} decoding at pos {pos} needs {need} blocks but "
+                f"owns {len(self._owned[s])} — the kernel would walk into "
+                f"trash")
 
     # --------------------------------------------------------------- seeding
 

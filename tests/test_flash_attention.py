@@ -42,6 +42,45 @@ def test_flash_matches_oracle(case, dtype):
                                np.asarray(y_ref), **tol)
 
 
+@pytest.mark.parametrize("window", [None, 16])
+def test_flash_q_off_anchors_causal_mask(window):
+    """``q_off`` is the absolute position of q row 0: row i attends to key
+    positions <= q_off + i (window counted back from there).  Replaying a
+    middle slice of queries against the full key buffer with q_off set to the
+    slice start must reproduce the matching rows of the full causal run —
+    the bucket-DOWN + forced-decode shape, where the key buffer extends past
+    the causal horizon of the replayed rows."""
+    bh, s, d, off, sq = 4, 128, 64, 32, 32
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = jax.random.normal(ks[0], (bh, s, d), jnp.float32)
+    k = jax.random.normal(ks[1], (bh, s, d), jnp.float32)
+    v = jax.random.normal(ks[2], (bh, s, d), jnp.float32)
+    y_full = flash_attention_kernel(q, k, v, causal=True, window=window,
+                                    block=(32, 64), interpret=True)
+    y_slice = flash_attention_kernel(q[:, off:off + sq], k, v, causal=True,
+                                     window=window, q_off=off, block=(32, 64),
+                                     interpret=True)
+    np.testing.assert_allclose(np.asarray(y_slice),
+                               np.asarray(y_full[:, off:off + sq]),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_flash_q_off_default_is_suffix():
+    """Omitting q_off must mean q_off = Sk - Sq (suffix queries) — the
+    contract both chunked prefill and bucket-DOWN replay rely on."""
+    bh, sq, sk, d = 4, 64, 128, 64
+    ks = jax.random.split(jax.random.PRNGKey(2), 3)
+    q = jax.random.normal(ks[0], (bh, sq, d), jnp.float32)
+    k = jax.random.normal(ks[1], (bh, sk, d), jnp.float32)
+    v = jax.random.normal(ks[2], (bh, sk, d), jnp.float32)
+    y_default = flash_attention_kernel(q, k, v, causal=True, block=(32, 64),
+                                       interpret=True)
+    y_explicit = flash_attention_kernel(q, k, v, causal=True, q_off=sk - sq,
+                                        block=(32, 64), interpret=True)
+    np.testing.assert_array_equal(np.asarray(y_default),
+                                  np.asarray(y_explicit))
+
+
 def test_flash_traffic_beats_unfused():
     """The kernel's HBM model must be far below the unfused chain: the
     measured baseline materializes ~6 [cq, ck] f32 tensors per block pair
