@@ -1,0 +1,215 @@
+"""Prefix sharing + suspend-to-host preemption vs the non-sharing pool.
+
+The million-user serving shape: every prompt is a shared system prefix plus
+a short per-request suffix.  The non-sharing paged engine prefills the whole
+prompt for every request; with ``prefix_cache=True`` the first request warms
+the radix index and every later admission points its block table at the
+resident blocks (``BlockPool.share``) — **zero prefill for the shared
+span**, copy-on-write at the divergence point, and token-for-token identical
+output.  The same trace is run oversubscribed so pool exhaustion preempts:
+``preempt="suspend"`` swaps the victim's resident state to host and resumes
+it bit-exact, finishing in no more ticks than the replay-from-prefill
+baseline (no emitted token is ever recomputed).
+
+Three engines per arch, all compared on the same trace:
+
+* ``baseline``  — paged, no sharing, replay preemption (the oracle).
+* ``prefix``    — prefix_cache=True, replay preemption.
+* ``suspend``   — prefix_cache=True, preempt="suspend".
+
+Exits non-zero on token mismatch, on a prefix run that still prefills every
+request, or on suspend taking more ticks than replay; the CI
+``bench-trajectory`` job runs ``--smoke`` and uploads ``BENCH_6.json``.
+
+Standalone:  PYTHONPATH=src python benchmarks/serve_prefix.py [--smoke]
+Also exposes ``run(quick)`` rows for the benchmarks.run CSV harness.
+
+Dense archs only: prefix sharing requires every cache leaf behind the block
+table, and MoE expert capacity couples batch rows (see serve.engine).
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+from typing import Dict, List
+
+import jax
+import numpy as np
+
+try:
+    from benchmarks.common import Row, write_bench
+except ModuleNotFoundError:            # invoked as a script from anywhere
+    import os
+    import sys
+    sys.path.insert(0, os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))))
+    from benchmarks.common import Row, write_bench
+
+ARCHS = ("llama3.2-1b", "gemma2-9b")
+
+
+def _setup(arch: str, n_requests: int, prefix_len: int, suffix_len: int,
+           n_prefixes: int):
+    from repro.configs import get_config
+    from repro.models import init_model
+    from repro.serve import shared_prefix_trace
+    cfg = get_config(arch, smoke=True)
+    cfg = cfg.replace(sparsity=dataclasses.replace(
+        cfg.sparsity, mode="compressed", impl="xla"))
+    params, _ = init_model(jax.random.PRNGKey(0), cfg)
+    reqs = shared_prefix_trace(cfg, n_requests=n_requests,
+                               prefix_len=prefix_len, suffix_len=suffix_len,
+                               gen_lens=[4, 6], seed=0,
+                               n_prefixes=n_prefixes)
+    return cfg, params, reqs
+
+
+def bench_arch(arch: str, n_requests: int = 8, prefix_len: int = 10,
+               suffix_len: int = 2, n_prefixes: int = 2, n_slots: int = 3,
+               block_size: int = 4) -> Dict:
+    from repro.serve import ServeEngine
+    cfg, params, reqs = _setup(arch, n_requests, prefix_len, suffix_len,
+                               n_prefixes)
+    plen = prefix_len + suffix_len
+    max_len = plen + 6
+    # oversubscribed: enough blocks for every slot's prefill but not for all
+    # of them to finish — preemptions are part of the measured regime (tight
+    # enough that even the sharing variants, whose hits shrink the physical
+    # footprint, still run out mid-decode)
+    span_blocks = -(-(max_len - 1) // block_size)
+    n_blocks = n_slots * span_blocks - 4
+
+    variants = {
+        "baseline": dict(),
+        "prefix": dict(prefix_cache=True),
+        "suspend": dict(prefix_cache=True, preempt="suspend"),
+    }
+    out: Dict = {"arch": arch, "n_requests": n_requests,
+                 "prefix_len": prefix_len, "suffix_len": suffix_len,
+                 "n_prefixes": n_prefixes, "block_size": block_size,
+                 "n_slots": n_slots, "usable_blocks": n_blocks - 1}
+    tokens: Dict[str, Dict] = {}
+    for name, kw in variants.items():
+        t0 = time.time()
+        eng = ServeEngine(params, cfg, n_slots=n_slots, max_len=max_len,
+                          kv="paged", block_size=block_size,
+                          n_blocks=n_blocks, **kw)
+        res = eng.run([dataclasses.replace(r) for r in reqs])
+        dt = time.time() - t0
+        st = eng.stats()
+        tokens[name] = res
+        out[name] = {
+            "ticks": int(st["ticks"]),
+            "decode_steps": int(st["decode_steps"]),
+            "prefill_calls": int(st["prefill_calls"]),
+            "prefix_hits": int(st["prefix_hits"]),
+            "prefix_hit_tokens": int(st["prefix_hit_tokens"]),
+            "cow_copies": int(st["cow_copies"]),
+            "preemptions": int(st["preemptions"]),
+            "swap_outs": int(st["swap_outs"]),
+            "swap_ins": int(st["swap_ins"]),
+            "index_evictions": int(st["index_evictions"]),
+            "occupancy": round(st["occupancy"], 4),
+            "seconds": round(dt, 4),
+        }
+
+    out["token_match"] = all(
+        np.array_equal(tokens["baseline"][r.rid].tokens,
+                       tokens[v][r.rid].tokens)
+        for r in reqs for v in ("prefix", "suspend"))
+    # the tentpole claims, as checkable facts:
+    # 1. hit admissions run zero prefill for the shared span: every admission
+    #    (originals + replay readmissions) is either a hit or a prefill, hits
+    #    happen, and the prefix engine prefills strictly less than the
+    #    non-sharing baseline on the same trace (whose every admission —
+    #    including each replay — pays a full prefill)
+    out["prefill_ok"] = (
+        out["prefix"]["prefix_hits"] > 0
+        and out["prefix"]["prefill_calls"] + out["prefix"]["prefix_hits"]
+            == n_requests + out["prefix"]["preemptions"]
+        and out["prefix"]["prefill_calls"]
+            < out["baseline"]["prefill_calls"])
+    # 2. suspended requests resume instead of replaying: preemption happens,
+    #    every swap-out is swapped back in, and no emitted token is ever
+    #    recomputed — so suspend never needs more ticks than replay
+    out["preempt_ok"] = (
+        out["suspend"]["preemptions"] > 0
+        and out["suspend"]["swap_outs"] == out["suspend"]["preemptions"]
+        and out["suspend"]["swap_ins"] == out["suspend"]["swap_outs"]
+        and out["suspend"]["ticks"] <= out["baseline"]["ticks"])
+    out["ok"] = bool(out["token_match"] and out["prefill_ok"]
+                     and out["preempt_ok"])
+    return out
+
+
+def bench(archs: List[str], **kw) -> Dict:
+    report = {"bench": "serve_prefix", "archs": {}, "ok": True}
+    for arch in archs:
+        res = bench_arch(arch, **kw)
+        report["archs"][arch] = res
+        report["ok"] &= res["ok"]
+    return report
+
+
+def run(quick: bool = True) -> List[Row]:
+    rows: List[Row] = []
+    rep = bench(["llama3.2-1b"] if quick else list(ARCHS))
+    for arch, r in rep["archs"].items():
+        rows.append((
+            f"serve_prefix_{arch.split('-')[0]}",
+            r["prefix"]["seconds"] * 1e6,
+            f"hits{r['prefix']['prefix_hits']}/{r['n_requests']}|"
+            f"prefill{r['prefix']['prefill_calls']}"
+            f"vs{r['baseline']['prefill_calls']}|"
+            f"ticks{r['suspend']['ticks']}vs{r['baseline']['ticks']}|"
+            f"match{int(r['token_match'])}"))
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--archs", default=",".join(ARCHS),
+                    help="comma list from {%s}" % ",".join(ARCHS))
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--prefix-len", type=int, default=10)
+    ap.add_argument("--suffix-len", type=int, default=2)
+    ap.add_argument("--prefixes", type=int, default=2)
+    ap.add_argument("--slots", type=int, default=3)
+    ap.add_argument("--block-size", type=int, default=4)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny CI iteration (llama only, 6 requests)")
+    ap.add_argument("--out", default="BENCH_6.json")
+    args = ap.parse_args()
+
+    archs = (["llama3.2-1b"] if args.smoke
+             else [a.strip() for a in args.archs.split(",") if a.strip()])
+    for a in archs:
+        if a not in ARCHS:
+            raise SystemExit(f"unknown arch {a!r}; known: {list(ARCHS)}")
+    report = bench(archs,
+                   n_requests=6 if args.smoke else args.requests,
+                   prefix_len=args.prefix_len, suffix_len=args.suffix_len,
+                   n_prefixes=args.prefixes, n_slots=args.slots,
+                   block_size=args.block_size)
+
+    for arch, r in report["archs"].items():
+        b, p, s = r["baseline"], r["prefix"], r["suspend"]
+        print(f"{arch}: prefix {p['prefix_hits']}/{r['n_requests']} hits, "
+              f"{p['prefill_calls']} prefills vs {b['prefill_calls']} "
+              f"baseline ({p['prefix_hit_tokens']} cached tokens reused, "
+              f"{p['cow_copies']} COW) | suspend {s['ticks']} ticks vs "
+              f"{b['ticks']} replay ({s['swap_outs']} swaps, "
+              f"{s['preemptions']} preemptions) | tokens "
+              f"{'MATCH' if r['token_match'] else 'MISMATCH'}")
+
+    write_bench(report, args.out)
+    if not report["ok"]:
+        raise SystemExit("prefix serving failed an invariant (token "
+                         "mismatch, prefill not elided, or suspend tick "
+                         "regression)")
+
+
+if __name__ == "__main__":
+    main()

@@ -20,6 +20,12 @@ Pallas kernel that walks the block table in-kernel; ``--attn gather`` (the
 default) materializes each slot's stream into a dense layout first and is
 the oracle the fused path is tested against (see docs/serve.md, "decode
 attention paths").
+``--prefix-cache`` (paged only) keeps retired requests' KV blocks in a radix
+index keyed on prompt tokens: admissions whose prompt shares a cached prefix
+point their block table at the resident blocks (refcounted, copy-on-write)
+and skip prefill for the shared span.  ``--preempt suspend`` swaps a
+pool-exhaustion victim's KV to host numpy and resumes it bit-exact instead
+of replaying from prefill (the ``replay`` default).
 ``serve`` is kept as the PR-1 API (fixed batch of identical requests) for
 the examples and the integration tests.
 """
@@ -36,7 +42,7 @@ import jax
 from repro.configs import get_config
 from repro.models import convert_to_compressed, init_model
 from repro.serve import (ServeEngine, serve_fixed_batch, serve_sequential,
-                         synthetic_trace)
+                         shared_prefix_trace, synthetic_trace)
 from repro.serve.cache import seed_decode_caches as _seed_caches  # compat
 
 
@@ -99,7 +105,29 @@ def main() -> None:
     ap.add_argument("--blocks", type=int, default=0,
                     help="paged pool: physical block count incl. the trash "
                          "block (0 = full provisioning)")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="paged only: keep retired requests' KV blocks in a "
+                         "radix index over prompt tokens; admissions whose "
+                         "prompt shares a cached prefix skip prefill for the "
+                         "shared span (refcounted blocks, copy-on-write)")
+    ap.add_argument("--preempt", default="replay",
+                    choices=["replay", "suspend"],
+                    help="paged pool-exhaustion policy: 'replay' requeues the "
+                         "victim and replays it from prefill; 'suspend' swaps "
+                         "its KV blocks + slot state to host numpy and "
+                         "resumes bit-exact on readmission")
+    ap.add_argument("--prefix-mix", type=int, default=1,
+                    help="with --prefix-cache: number of distinct shared "
+                         "system prompts in the generated trace (the trace "
+                         "becomes shared-prefix: 3/4 of --prompt-len shared, "
+                         "1/4 per-request suffix)")
     args = ap.parse_args()
+
+    if (args.prefix_cache or args.preempt != "replay") and (
+            args.kv != "paged" or args.scheduler != "continuous"):
+        raise SystemExit("--prefix-cache/--preempt suspend require --kv paged "
+                         "with --scheduler continuous (both operate on the "
+                         "block pool)")
 
     # weights are born dense (srste semantics) so both --weights settings
     # serve literally the same model: 'compressed' packs it offline.
@@ -108,15 +136,26 @@ def main() -> None:
     gen_lens = ([int(g) for g in args.gen_mix.split(",")] if args.gen_mix
                 else [args.gen])
     n_req = args.requests or args.slots
-    reqs = synthetic_trace(cfg, n_requests=n_req, prompt_len=args.prompt_len,
-                           gen_lens=gen_lens, arrival_every=args.arrival_every)
+    if args.prefix_cache:
+        pre = max(1, args.prompt_len * 3 // 4)
+        reqs = shared_prefix_trace(cfg, n_requests=n_req, prefix_len=pre,
+                                   suffix_len=args.prompt_len - pre,
+                                   gen_lens=gen_lens,
+                                   arrival_every=args.arrival_every,
+                                   n_prefixes=args.prefix_mix)
+    else:
+        reqs = synthetic_trace(cfg, n_requests=n_req,
+                               prompt_len=args.prompt_len, gen_lens=gen_lens,
+                               arrival_every=args.arrival_every)
     max_len = args.prompt_len + max(gen_lens)
 
     if args.scheduler == "continuous":
         eng = ServeEngine(params, cfg, n_slots=args.slots, max_len=max_len,
                           compressed=compressed, kv=args.kv,
                           block_size=args.block_size,
-                          n_blocks=args.blocks or None, attn=args.attn)
+                          n_blocks=args.blocks or None, attn=args.attn,
+                          prefix_cache=args.prefix_cache,
+                          preempt=args.preempt)
         results = eng.run(reqs)
         st = eng.stats()
         print(f"continuous[{args.weights},{args.kv},{args.attn}]: "
@@ -129,7 +168,14 @@ def main() -> None:
             print(f"paged pool: {int(st['kv_bytes_peak'])} B KV peak of "
                   f"{int(st['kv_bytes_capacity'])} B capacity, "
                   f"{int(st['prefill_compiles'])} prefill shapes, "
-                  f"{int(st['preemptions'])} preemptions")
+                  f"{int(st['preemptions'])} preemptions "
+                  f"({args.preempt}: {int(st['swap_outs'])} swap-outs)")
+        if args.prefix_cache:
+            print(f"prefix cache: {int(st['prefix_hits'])} hits / "
+                  f"{int(st['prefill_calls'])} prefills, "
+                  f"{int(st['prefix_hit_tokens'])} cached tokens reused, "
+                  f"{int(st['cow_copies'])} COW copies, "
+                  f"{int(st['index_blocks'])} blocks resident in index")
     else:
         if args.kv == "paged":
             raise SystemExit("--kv paged requires --scheduler continuous "

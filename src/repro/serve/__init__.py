@@ -20,7 +20,14 @@ one preallocated KV-cache tree) fed by a FCFS request queue:
   become ``[..., n_blocks, block_size, ...]`` block pools addressed through
   per-request int32 block tables (``table[slot, pos // block_size]``) — the
   software analog of the paper's indexed register reads — so cache memory is
-  admitted in blocks instead of whole ``max_len`` rows.
+  admitted in blocks instead of whole ``max_len`` rows.  Blocks are
+  refcounted (``share`` + copy-on-write) so many tables can name one
+  physical block, and ``swap_out``/``swap_in`` round-trip a slot's resident
+  state to host numpy for suspend-to-host preemption.
+* ``prefix``    — ``PrefixIndex``: host-side radix trie over retired
+  prompts' per-token block ids; admission matches incoming prompts against
+  it and a hit shares the resident blocks instead of prefilling the shared
+  span (LRU leaf eviction under pool pressure).
 * ``engine``    — ``ServeEngine``: prefill-on-admission + one batched
   ``decode_step`` per tick with a per-slot int32 position vector (the
   attention caches update and mask per batch row).  ``kv="paged"`` routes
@@ -47,15 +54,16 @@ that ratio at 1.
 
 from repro.serve.cache import scatter_slot, seed_decode_caches
 from repro.serve.engine import ServeEngine
-from repro.serve.paged import BlockPool, default_buckets
-from repro.serve.request import (Request, RequestResult, synthetic_request,
-                                 synthetic_trace)
+from repro.serve.paged import BlockPool, SwapState, default_buckets
+from repro.serve.prefix import PrefixIndex
+from repro.serve.request import (Request, RequestResult, shared_prefix_trace,
+                                 synthetic_request, synthetic_trace)
 from repro.serve.scheduler import SlotScheduler
 from repro.serve.sequential import serve_fixed_batch, serve_sequential
 
 __all__ = [
-    "BlockPool", "Request", "RequestResult", "ServeEngine", "SlotScheduler",
-    "default_buckets", "scatter_slot", "seed_decode_caches",
-    "serve_fixed_batch", "serve_sequential", "synthetic_request",
-    "synthetic_trace",
+    "BlockPool", "PrefixIndex", "Request", "RequestResult", "ServeEngine",
+    "SlotScheduler", "SwapState", "default_buckets", "scatter_slot",
+    "seed_decode_caches", "serve_fixed_batch", "serve_sequential",
+    "shared_prefix_trace", "synthetic_request", "synthetic_trace",
 ]

@@ -38,6 +38,25 @@ interleaves two operations:
   takes the [n_slots, max_blocks] table as an argument; see
   ``models.attention`` for the gather-based view.
 
+``prefix_cache=True`` (paged only) adds cross-request block sharing: retired
+prompts register their (tokens -> block ids) mapping in a host-side radix
+trie (``serve.prefix.PrefixIndex``), admission matches an incoming token
+prompt against it, and a hit makes the new slot's table *point at* the
+cached blocks (``BlockPool.share``) — the shared span costs zero prefill
+steps; only the divergent suffix replays through forced decode.  The index
+pins its blocks with refcounts and is evicted LRU under memory pressure;
+the first decode write into a partially shared block triggers copy-on-write
+(``BlockPool.cow``), so a shared block is never mutated.
+
+``preempt="suspend"`` (paged only) replaces replay-from-prefill preemption
+with suspend-to-host: the victim's owned blocks and slot-indexed state are
+swapped to host numpy (``BlockPool.swap_out``) together with its scheduler
+state (emitted tokens, pending prompt catch-up, position), and readmission
+restores all of it (``swap_in``) instead of re-running prefill — preemption
+cost scales with resident bytes instead of prompt length, and no emitted
+token is ever recomputed.  ``preempt="replay"`` keeps the PR-5 behavior and
+serves as the oracle (greedy decode makes replay deterministic).
+
 This is the decode regime the paper's compressed N:M format targets: every
 step is a small-batch matvec against the compressed weight stream
 (``kernels.nm_spmv``'s vindexmac dataflow), so keeping slots full converts
@@ -48,7 +67,7 @@ full by admitting on bytes, not rows.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -57,7 +76,9 @@ import numpy as np
 from repro.models import (convert_to_compressed, decode_step, init_caches,
                           prefill, weight_stream_bytes)
 from repro.serve.cache import scatter_slot, seed_decode_caches
-from repro.serve.paged import BlockPool, default_buckets
+from repro.serve.paged import BlockPool, SwapState, _detect_layout, \
+    default_buckets
+from repro.serve.prefix import PrefixIndex
 from repro.serve.request import Request, RequestResult
 from repro.serve.scheduler import SlotScheduler
 
@@ -70,6 +91,15 @@ class _SlotState:
     # prompt tokens not yet fed (bucketed-down prefill catch-up); while
     # non-empty the slot is still consuming its prompt and emits nothing
     pending: List[int] = dataclasses.field(default_factory=list)
+
+
+@dataclasses.dataclass
+class _Suspended:
+    """A suspended-to-host request: swapped cache state + runtime state."""
+    state: _SlotState
+    swap: SwapState
+    pos: int
+    tok: int
 
 
 class ServeEngine:
@@ -90,7 +120,8 @@ class ServeEngine:
                  compressed: bool = False, kv: str = "slotted",
                  block_size: int = 4, n_blocks: Optional[int] = None,
                  prefill_buckets: Optional[Sequence[int]] = None,
-                 attn: str = "gather", debug_invariants: bool = False):
+                 attn: str = "gather", prefix_cache: bool = False,
+                 preempt: str = "replay", debug_invariants: bool = False):
         if kv not in ("slotted", "paged"):
             raise ValueError(f"kv must be 'slotted' or 'paged', got {kv!r}")
         if attn not in ("gather", "fused"):
@@ -99,6 +130,13 @@ class ServeEngine:
             raise ValueError("attn='fused' requires kv='paged' (the fused "
                              "kernel reads through the block table; the "
                              "slotted layout has none)")
+        if preempt not in ("replay", "suspend"):
+            raise ValueError(f"preempt must be 'replay' or 'suspend', "
+                             f"got {preempt!r}")
+        if prefix_cache and kv != "paged":
+            raise ValueError("prefix_cache=True requires kv='paged' (prefix "
+                             "hits share physical blocks through the block "
+                             "table; the slotted layout has none)")
         if compressed:
             # serve from the compressed pool: pack every SparseLinear offline
             # (the paper's compress step) and flip the policy to 'compressed'
@@ -114,6 +152,7 @@ class ServeEngine:
         self.max_len = max_len
         self.kv = kv
         self.attn = attn
+        self.preempt_mode = preempt
         self.debug_invariants = debug_invariants
         self.scheduler = SlotScheduler(n_slots)
         self.pos = np.zeros(n_slots, np.int32)
@@ -123,11 +162,27 @@ class ServeEngine:
         self.decode_steps = 0
         self.ticks = 0
         self.preemptions = 0
+        self.prefill_calls = 0               # admissions that ran a prefill
+        self.prefix_hits = 0                 # admissions served from the trie
+        self.prefix_hit_tokens = 0           # prompt tokens skipped via hits
+        self.swap_outs = 0
+        self.swap_ins = 0
+        self.index_evictions = 0
+        self.rejected = 0
         self.prefill_lengths = set()         # distinct compiled prefill seqs
         self._slots: Dict[int, _SlotState] = {}
+        self._suspended: Dict[int, _Suspended] = {}   # rid -> host state
         if kv == "paged":
             self.pool = BlockPool(cfg, n_slots, max_len, block_size, n_blocks)
             self.caches = None
+            # prefix sharing needs every cache leaf addressable through the
+            # block table: a family with slot-indexed state (SSM, conv tails,
+            # encoder cross K/V) regenerates that state only in prefill, so
+            # skipping prefill would resume from zeros — not cacheable.
+            self._all_paged = (len(self.pool._seq_axes) > 0 and
+                               all(ax is not None
+                                   for ax in self.pool._seq_axes))
+            self.index = PrefixIndex() if prefix_cache else None
             self.prefill_buckets = tuple(sorted(set(
                 prefill_buckets if prefill_buckets is not None
                 else default_buckets(max_len))))
@@ -138,8 +193,14 @@ class ServeEngine:
                 lambda p, b, lp: prefill(p, cfg, b, logit_pos=lp))
         else:
             self.pool = None
+            self.index = None
+            self._all_paged = False
             self.prefill_buckets = ()
             self.caches, _ = init_caches(cfg, n_slots, max_len)
+            # sequence-axis detection (same structural probe the paged pool
+            # uses) so stats() can split true KV bytes from slot-indexed
+            # state instead of lumping every leaf into "resident KV"
+            _, _, self._slotted_seq_axes = _detect_layout(cfg, n_slots)
             # one jit each: decode re-uses a single (pool-shaped) executable;
             # prefill compiles per distinct prompt length (paged buckets).
             self._decode = jax.jit(
@@ -149,17 +210,28 @@ class ServeEngine:
     # --------------------------------------------------------------- frontend
 
     def submit(self, req: Request) -> None:
+        """Queue a request.  A request the pool can never serve (span beyond
+        ``max_len``, or more blocks than physically exist) is recorded as a
+        rejected ``RequestResult`` instead of raising — one oversize request
+        must not kill every other in-flight request in the trace."""
         if req.prompt_len + req.max_new_tokens - 1 > self.max_len:
-            raise ValueError(
-                f"request {req.rid}: prompt {req.prompt_len} + gen "
-                f"{req.max_new_tokens} exceeds pool max_len {self.max_len}")
+            self._reject(req, f"prompt {req.prompt_len} + gen "
+                              f"{req.max_new_tokens} exceeds pool max_len "
+                              f"{self.max_len}")
+            return
         if self.kv == "paged":
             need = self.pool.blocks_for(req.prompt_len + req.max_new_tokens - 1)
             if need > self.pool.usable_blocks:
-                raise ValueError(
-                    f"request {req.rid}: needs {need} blocks, pool has "
-                    f"{self.pool.usable_blocks} usable")
+                self._reject(req, f"needs {need} blocks, pool has "
+                                  f"{self.pool.usable_blocks} usable")
+                return
         self.scheduler.submit(req)
+
+    def _reject(self, req: Request, reason: str) -> None:
+        self.results[req.rid] = RequestResult(
+            rid=req.rid, tokens=np.zeros(0, np.int32), admitted_at=-1,
+            finished_at=-1, rejected=True, reason=reason)
+        self.rejected += 1
 
     # ------------------------------------------------------------- admission
 
@@ -197,15 +269,59 @@ class ServeEngine:
         pb, pad_up = self._plan(req)
         return req.prompt_len if pad_up else pb
 
-    def _fits(self, req: Request) -> bool:
-        return self.pool.can_alloc(
-            self.pool.blocks_for(self._seed_positions(req)))
+    def _prefix_cacheable(self, req: Request) -> bool:
+        """Prefix sharing is keyed on tokens and requires every cache leaf
+        to live behind the block table (slot-indexed state — SSM, conv
+        tails, encoder cross K/V — is only regenerated by prefill)."""
+        return (self.index is not None and self._all_paged
+                and set(req.inputs) == {"tokens"})
+
+    def _match(self, req: Request, now: int) -> Tuple[int, List[int]]:
+        """Longest cached prefix of ``req``'s prompt: ``(m, blocks)`` where
+        ``blocks`` back positions [0, m).  Capped at ``prompt_len - 1`` —
+        the last prompt token always feeds through decode to produce the
+        first logits (they are not cached)."""
+        if not self._prefix_cacheable(req):
+            return 0, []
+        toks = np.asarray(req.inputs["tokens"])[:req.prompt_len - 1]
+        m, pids = self.index.match(toks, now)
+        if m <= 0:
+            return 0, []
+        return m, [pids[i] for i in range(0, m, self.pool.block_size)]
+
+    def _fits(self, req: Request, now: int) -> bool:
+        """Block-aware admission gate.  A prefix hit shrinks the fresh-block
+        need to one (the shared span is a table write; the first divergent
+        write needs one block for COW/growth); a suspended request needs
+        exactly its swapped resident set back.  When the free heap is short,
+        LRU-evict the prefix index before refusing — cached-but-idle blocks
+        must never starve admission."""
+        if req.rid in self._suspended:
+            need = max(self._suspended[req.rid].swap.n_blocks, 1)
+        else:
+            m, _ = self._match(req, now)
+            need = (1 if m > 0
+                    else self.pool.blocks_for(self._seed_positions(req)))
+        return self._reclaim(need)
+
+    def _reclaim(self, need: int) -> bool:
+        """Evict LRU prefix-index entries until ``need`` blocks are free (or
+        nothing is left to evict).  True when the allocation can proceed."""
+        while not self.pool.can_alloc(need):
+            if self.index is None or not self.index.evict_lru(self.pool):
+                return False
+            self.index_evictions += 1
+        return True
 
     def _admit(self, slot: int, req: Request, now: int) -> None:
         if self.kv == "paged":
+            if req.rid in self._suspended:
+                self._resume(slot, req, now)
+                return
             self._admit_paged(slot, req, now)
             return
         self.prefill_lengths.add(req.prompt_len)
+        self.prefill_calls += 1
         batch = {k: jnp.asarray(v)[None] for k, v in req.inputs.items()}
         logits, pf = self._prefill(self.params, batch)
         single, _ = init_caches(self.cfg, 1, self.max_len)
@@ -222,6 +338,24 @@ class ServeEngine:
 
     def _admit_paged(self, slot: int, req: Request, now: int) -> None:
         plen = req.prompt_len
+        # prefix-cache hit: the shared span is already resident — point the
+        # slot's table at the cached blocks (a table write, zero prefill)
+        # and replay only the divergent suffix through forced decode steps.
+        # Re-matched here (not reused from _fits) so an eviction between the
+        # two calls can never hand out a freed block.
+        m, shared = self._match(req, now)
+        if m > 0:
+            self.pool.share(slot, shared)
+            toks = np.asarray(req.inputs["tokens"])
+            self._slots[slot] = _SlotState(
+                req=req, tokens=[], admitted_at=now,
+                pending=[int(t) for t in toks[m + 1:plen]])
+            self.pos[slot] = m
+            self.tok[slot] = int(toks[m])
+            self.active[slot] = True
+            self.prefix_hits += 1
+            self.prefix_hit_tokens += m
+            return
         pb, pad_up = self._plan(req)
         n_seed = plen if pad_up else pb
         if not self.pool.alloc(slot, self.pool.blocks_for(n_seed)):
@@ -241,6 +375,7 @@ class ServeEngine:
                             + ((0, 0),) * (a.ndim - 2))
             batch[k] = a
         self.prefill_lengths.add(pb)
+        self.prefill_calls += 1
         lp = (plen if pad_up else pb) - 1
         logits, pf = self._prefill(self.params, batch,
                                    jnp.asarray(lp, jnp.int32))
@@ -269,6 +404,15 @@ class ServeEngine:
         self.scheduler.release(slot)
         self.active[slot] = False
         if self.kv == "paged":
+            if self._prefix_cacheable(st.req):
+                # register the prompt's (token -> block) mapping BEFORE the
+                # slot releases its references: the index pins the blocks,
+                # so the cached span never transits through the free heap
+                toks = np.asarray(st.req.inputs["tokens"])[:st.req.prompt_len]
+                bs = self.pool.block_size
+                pids = [int(self.pool.table[slot, i // bs])
+                        for i in range(len(toks))]
+                self.index.insert(toks, pids, now, self.pool)
             self.pool.free(slot)
             self.pos[slot] = 0               # idle rows write into trash:0
             self.tok[slot] = 0
@@ -276,47 +420,88 @@ class ServeEngine:
     # ------------------------------------------------------------ preemption
 
     def _preempt(self, slot: int, now: int) -> None:
+        """Evict ``slot`` back to the queue front.  ``preempt="replay"``
+        throws the resident state away (readmission replays from prefill);
+        ``preempt="suspend"`` swaps it to host numpy — blocks, slot-indexed
+        state, emitted tokens, prompt catch-up — and readmission restores
+        it, so the cost scales with resident bytes, not prompt length."""
         st = self._slots.pop(slot)
-        self.pool.free(slot)
-        self.scheduler.preempt(slot)         # requeued at the FRONT
+        if self.preempt_mode == "suspend":
+            self._suspended[st.req.rid] = _Suspended(
+                state=st, swap=self.pool.swap_out(slot),
+                pos=int(self.pos[slot]), tok=int(self.tok[slot]))
+            self.swap_outs += 1
+            self.scheduler.suspend(slot)     # requeued at the FRONT, tagged
+        else:
+            self.pool.free(slot)
+            self.scheduler.preempt(slot)     # requeued at the FRONT
         self.active[slot] = False
         self.pos[slot] = 0
         self.tok[slot] = 0
         self.preemptions += 1
 
-    def _grow_blocks(self, now: int) -> None:
-        """Lazily back every active slot's next write position, preempting
-        the newest-admitted request when the free list runs dry (oldest
-        requests are never preempted, so progress is guaranteed)."""
+    def _resume(self, slot: int, req: Request, now: int) -> None:
+        """Re-admit a suspended request: swap its resident state back in and
+        continue exactly where it stopped — no prefill, no token replay."""
+        sus = self._suspended.pop(req.rid)
+        if not self.pool.swap_in(slot, sus.swap):
+            raise RuntimeError("resume without enough free blocks "
+                               "(scheduler fits-gate should prevent this)")
+        self._slots[slot] = sus.state
+        self.pos[slot] = sus.pos
+        self.tok[slot] = sus.tok
+        self.active[slot] = True
+        self.swap_ins += 1
+
+    def _prepare_slots(self, now: int) -> None:
+        """Make every active slot writable for this tick: lazily back its
+        write position (``ensure``) and copy-on-write the backing block if
+        it is shared (``cow`` — a shared block is never mutated).  When the
+        pool runs dry, reclaim LRU prefix-index blocks first, then preempt
+        the newest-admitted request (oldest requests are never preempted,
+        so progress is guaranteed)."""
         for slot in sorted(self._slots,
                            key=lambda s: (self._slots[s].admitted_at, s)):
-            if slot not in self._slots:      # preempted by an earlier victim
-                continue
-            while not self.pool.ensure(slot, int(self.pos[slot])):
+            while slot in self._slots:       # not preempted by earlier victim
+                pos = int(self.pos[slot])
+                short = max(0, pos // self.pool.block_size + 1
+                            - len(self.pool._owned[slot]))
+                need = short or (1 if self.pool.needs_cow(slot, pos) else 0)
+                ok = (self._reclaim(need) and self.pool.ensure(slot, pos)
+                      and self.pool.cow(slot, pos))
+                if ok:
+                    break
                 victim = max(self._slots,
                              key=lambda s: (self._slots[s].admitted_at, s))
                 self._preempt(victim, now)
-                if victim == slot:           # the grower itself was newest
-                    break
 
     # ----------------------------------------------------------------- decode
 
     def step(self, now: int) -> None:
-        """One batched decode tick over the pool (per-slot positions)."""
+        """One batched decode tick over the pool (per-slot positions).
+
+        Occupancy is sampled HERE, after ``_prepare_slots`` has run its
+        preemptions and only when a decode step actually executes — sampling
+        before (as ``run`` once did) recorded phantom active slots on ticks
+        whose slots all got preempted and counted ticks that decoded
+        nothing."""
         if self.kv == "paged":
-            self._grow_blocks(now)
+            self._prepare_slots(now)
             if not self._slots:
                 return                       # everything was preempted
+            self.scheduler.record_occupancy()
             if self.debug_invariants:
                 # the fused kernel reads exactly the blocks the table names:
                 # prove every active slot's read window is backed by owned,
-                # non-free, non-trash blocks before launching it
-                self.pool.check_invariants(
+                # non-free, non-trash blocks — and its write block exclusive
+                # (COW ran) — before launching it
+                self.check_invariants(
                     active_pos={s: int(self.pos[s]) for s in self._slots})
             logits, self.pool.caches = self._decode(
                 self.params, self.pool.caches, jnp.asarray(self.tok),
                 jnp.asarray(self.pos), self.pool.device_table())
         else:
+            self.scheduler.record_occupancy()
             logits, self.caches = self._decode(
                 self.params, self.caches, jnp.asarray(self.tok),
                 jnp.asarray(self.pos))
@@ -346,7 +531,8 @@ class ServeEngine:
                 # one at a time: each admission allocates blocks, and the
                 # next fits-check must see the shrunken free list
                 while True:
-                    pairs = self.scheduler.admit(t, fits=self._fits, limit=1)
+                    pairs = self.scheduler.admit(
+                        t, fits=lambda r: self._fits(r, t), limit=1)
                     if not pairs:
                         break
                     self._admit(pairs[0][0], pairs[0][1], t)
@@ -354,11 +540,19 @@ class ServeEngine:
                 for slot, req in self.scheduler.admit(t):
                     self._admit(slot, req, t)
             if self.active.any():
-                self.scheduler.record_occupancy()
-                self.step(t)
+                self.step(t)                 # samples occupancy iff it decodes
             t += 1
         self.ticks = t
         return self.results
+
+    def check_invariants(self, active_pos: Optional[Dict[int, int]] = None
+                         ) -> None:
+        """Pool invariants with the engine's full reference picture: the
+        prefix index's block pins ride along as ``external_refs`` so the
+        free-XOR-refcounted accounting closes."""
+        self.pool.check_invariants(
+            active_pos=active_pos,
+            external_refs=self.index.block_refs() if self.index else None)
 
     def stats(self) -> Dict[str, float]:
         toks = sum(len(r.tokens) for r in self.results.values())
@@ -368,6 +562,8 @@ class ServeEngine:
                "tokens": float(toks),
                "ticks": float(self.ticks),
                "prefill_compiles": float(len(self.prefill_lengths)),
+               "prefill_calls": float(self.prefill_calls),
+               "rejected": float(self.rejected),
                # per-decode-step weight-stream traffic (every step re-reads
                # each linear once; see models.weight_stream_bytes)
                "weight_stream_bytes": float(ws["stream_bytes"]),
@@ -382,8 +578,29 @@ class ServeEngine:
                                        * self.pool.bytes_per_block),
                 "kv_bytes_capacity": float(self.pool.usable_blocks
                                            * self.pool.bytes_per_block),
-                "kv_state_bytes": float(self.pool.state_bytes)})
+                "kv_state_bytes": float(self.pool.state_bytes),
+                "prefix_hits": float(self.prefix_hits),
+                "prefix_hit_tokens": float(self.prefix_hit_tokens),
+                "cow_copies": float(self.pool.cow_copies),
+                "swap_outs": float(self.swap_outs),
+                "swap_ins": float(self.swap_ins),
+                "swap_bytes_resident": float(sum(
+                    s.swap.nbytes for s in self._suspended.values())),
+                "index_evictions": float(self.index_evictions),
+                "index_blocks": float(self.index.blocks if self.index else 0),
+                "index_tokens": float(self.index.cached_tokens
+                                      if self.index else 0)})
         else:
+            # sequence-axis leaves are the KV stream; slot-indexed state
+            # (SSM state, conv tails, encoder cross K/V) reports separately,
+            # mirroring the paged split so BENCH comparisons are
+            # apples-to-apples (the slotted layout preallocates every row,
+            # so resident == capacity by construction)
+            leaves = jax.tree_util.tree_leaves(self.caches)
             out["kv_bytes_resident"] = float(sum(
-                l.nbytes for l in jax.tree_util.tree_leaves(self.caches)))
+                l.nbytes for l, ax in zip(leaves, self._slotted_seq_axes)
+                if ax is not None))
+            out["kv_state_bytes"] = float(sum(
+                l.nbytes for l, ax in zip(leaves, self._slotted_seq_axes)
+                if ax is None))
         return out

@@ -19,15 +19,33 @@ Block 0 is a reserved *trash* block: idle batch rows keep writing somewhere
 harmless (the slotted engine relied on idle rows owning a whole row for the
 same reason), and the table of a freed slot resets to it.
 
-Invariants (property-tested in tests/test_paged.py):
-  * a physical block id is owned by at most one slot (or free) at all times;
-  * ``free`` returns every owned block exactly once (no double-free);
+Blocks are **refcounted** (PR 7): ``alloc`` hands out fresh blocks at
+refcount 1, ``share`` appends *existing* live blocks to another slot's table
+(incref — the prefix-cache hit path: admission becomes a table write instead
+of a prefill), and ``free`` releases a slot's references, returning a block
+to the free heap only when its last reference drops.  Writes never touch a
+shared block: ``cow`` copies a block with refcount > 1 onto a fresh block
+before the owner's next decode write (copy-on-write).  ``swap_out`` /
+``swap_in`` move one slot's resident state (owned blocks + slot-indexed
+leaves) to host numpy and back, bit-exact — the suspend-to-host preemption
+path, whose cost scales with resident bytes instead of prompt length.
+
+Invariants (property-tested in tests/test_paged.py + tests/test_prefix.py):
+  * a physical block is free XOR refcounted >= 1 — never both, never neither;
+  * ``free`` drops exactly one reference per table occurrence (no
+    double-free); the block returns to the free heap only at refcount 0;
   * table entries outside a slot's owned prefix always point at block 0;
-  * freed blocks are reusable by later allocations.
+  * freed blocks are reusable by later allocations, lowest id first
+    (the free list is a min-heap: same assignment order as the historical
+    sorted-list implementation without the O(n log n) re-sort per release);
+  * COW never mutates a block with refcount > 1 (the copy happens first);
+  * ``swap_out`` -> ``swap_in`` round-trips every leaf bit-exact.
 """
 
 from __future__ import annotations
 
+import dataclasses
+import heapq
 from typing import Dict, List, Optional, Tuple
 
 import jax
@@ -76,6 +94,43 @@ def _detect_layout(cfg, n_slots: int):
     return treedef, l1, axes
 
 
+def _detect_slot_axes(cfg, n_slots: int):
+    """Probe init_caches at two slot counts; the changed axis per leaf is the
+    slot (batch) axis.  Needed by swap_out/swap_in to move slot-indexed
+    leaves (SSM state, conv tails, encoder cross K/V) to host and back."""
+    a, _ = init_caches(cfg, n_slots, 1)
+    b, _ = init_caches(cfg, n_slots + 1, 1)
+    la = jax.tree_util.tree_leaves(a)
+    lb = jax.tree_util.tree_leaves(b)
+    axes: List[int] = []
+    for x, y in zip(la, lb):
+        diff = [i for i, (p, q) in enumerate(zip(x.shape, y.shape)) if p != q]
+        if len(diff) != 1:
+            raise ValueError(
+                f"paged layout detection: cache leaf changed in more than "
+                f"one axis between slot-count probes ({x.shape} vs {y.shape})")
+        axes.append(diff[0])
+    return axes
+
+
+@dataclasses.dataclass
+class SwapState:
+    """One suspended slot's resident cache state, on host (numpy).
+
+    ``paged`` holds one ``[n_owned, block_size, ...]`` array per paged leaf
+    (the slot's owned blocks, in table order); ``state`` one slot-row array
+    per slot-indexed leaf.  ``swap_in`` restores both bit-exact into freshly
+    allocated blocks / the target slot row."""
+
+    n_blocks: int
+    paged: List[np.ndarray]
+    state: List[np.ndarray]
+
+    @property
+    def nbytes(self) -> int:
+        return sum(a.nbytes for a in self.paged + self.state)
+
+
 class BlockPool:
     """Paged decode-cache pool with per-slot block tables.
 
@@ -115,11 +170,16 @@ class BlockPool:
         self.caches = jax.tree_util.tree_unflatten(self._treedef, leaves)
 
         self._staging = None                 # built lazily on first seed
+        self._slot_axes = _detect_slot_axes(cfg, n_slots)
         self.table = np.zeros((n_slots, self.table_width), np.int32)
-        # pop() hands out the lowest free id first (deterministic traces)
-        self._free: List[int] = list(range(self.n_blocks - 1, 0, -1))
+        # min-heap: heappop hands out the lowest free id first (deterministic
+        # traces, identical assignment order to the historical sorted list)
+        self._free: List[int] = list(range(1, self.n_blocks))
+        heapq.heapify(self._free)
         self._owned: Dict[int, List[int]] = {s: [] for s in range(n_slots)}
+        self.ref = np.zeros(self.n_blocks, np.int32)   # trash stays 0
         self.peak_blocks = 0
+        self.cow_copies = 0
 
     # ------------------------------------------------------------ accounting
 
@@ -136,7 +196,9 @@ class BlockPool:
 
     @property
     def used_blocks(self) -> int:
-        return sum(len(v) for v in self._owned.values())
+        """Physical blocks with at least one live reference (a block shared
+        by k tables still occupies one physical block)."""
+        return self.usable_blocks - len(self._free)
 
     @property
     def bytes_per_block(self) -> int:
@@ -164,7 +226,8 @@ class BlockPool:
         return len(self._free) >= n
 
     def alloc(self, slot: int, n: int) -> bool:
-        """Append n fresh blocks to ``slot``'s table; False if exhausted."""
+        """Append n fresh blocks (refcount 1) to ``slot``'s table; False if
+        exhausted."""
         if len(self._free) < n:
             return False
         owned = self._owned[slot]
@@ -173,11 +236,50 @@ class BlockPool:
                 f"slot {slot}: {len(owned) + n} blocks exceeds table width "
                 f"{self.table_width} (max_len {self.max_len})")
         for _ in range(n):
-            pid = self._free.pop()
+            pid = heapq.heappop(self._free)
+            self.ref[pid] = 1
             self.table[slot, len(owned)] = pid
             owned.append(pid)
         self.peak_blocks = max(self.peak_blocks, self.used_blocks)
         return True
+
+    def share(self, slot: int, pids: List[int]) -> None:
+        """Append *existing live* blocks to ``slot``'s table (incref each) —
+        the prefix-cache hit path: the new request's table points at blocks
+        another owner (a slot or the prefix index) already holds, so the
+        shared span costs a table write instead of a prefill."""
+        owned = self._owned[slot]
+        if len(owned) + len(pids) > self.table_width:
+            raise ValueError(
+                f"slot {slot}: sharing {len(pids)} blocks onto {len(owned)} "
+                f"exceeds table width {self.table_width}")
+        for pid in pids:
+            if pid == TRASH_BLOCK or self.ref[pid] < 1:
+                raise ValueError(
+                    f"share: block {pid} is not live (ref "
+                    f"{int(self.ref[pid])}) — sharing a freed block is a "
+                    f"use-after-free")
+            if pid in owned:
+                raise ValueError(
+                    f"share: slot {slot} already owns block {pid} — a table "
+                    f"must not name a block twice")
+            self.ref[pid] += 1
+            self.table[slot, len(owned)] = pid
+            owned.append(pid)
+
+    def incref(self, pid: int) -> None:
+        """Take an extra reference on a live block (prefix-index pinning)."""
+        if pid == TRASH_BLOCK or self.ref[pid] < 1:
+            raise ValueError(f"incref on non-live block {pid}")
+        self.ref[pid] += 1
+
+    def decref(self, pid: int) -> None:
+        """Drop one reference; the block returns to the free heap at zero."""
+        if pid == TRASH_BLOCK or self.ref[pid] < 1:
+            raise ValueError(f"decref on non-live block {pid}")
+        self.ref[pid] -= 1
+        if self.ref[pid] == 0:
+            heapq.heappush(self._free, pid)
 
     def ensure(self, slot: int, pos: int) -> bool:
         """Lazily append blocks until position ``pos`` is backed."""
@@ -188,32 +290,140 @@ class BlockPool:
         return self.alloc(slot, short)
 
     def free(self, slot: int) -> None:
-        """Return every block owned by ``slot``; reset its table to trash."""
-        self._free.extend(self._owned[slot])
-        self._free.sort(reverse=True)        # keep lowest-id-first determinism
+        """Release every reference ``slot`` holds; reset its table to trash.
+        Blocks shared with other tables (or the prefix index) stay resident."""
+        for pid in self._owned[slot]:
+            self.decref(pid)
         self._owned[slot] = []
         self.table[slot, :] = TRASH_BLOCK
 
-    def check_invariants(self, active_pos: Optional[Dict[int, int]] = None
+    # --------------------------------------------------------- copy-on-write
+
+    def write_block(self, slot: int, pos: int) -> int:
+        """The physical block a decode write at ``pos`` would land in."""
+        return int(self.table[slot, pos // self.block_size])
+
+    def needs_cow(self, slot: int, pos: int) -> bool:
+        """True when the block backing ``pos`` is shared (refcount > 1) —
+        the owner must copy before its next decode write mutates it."""
+        return self.ref[self.write_block(slot, pos)] > 1
+
+    def cow(self, slot: int, pos: int) -> bool:
+        """Copy-on-write the block backing ``pos`` for ``slot``: copy its
+        device contents onto a fresh block, repoint the slot's table entry,
+        and drop the reference on the shared original.  No-op (True) when the
+        block is already exclusive; False when no free block is available
+        (the caller must evict or preempt first).  The shared block itself is
+        **never mutated**."""
+        idx = pos // self.block_size
+        old = int(self.table[slot, idx])
+        if self.ref[old] <= 1:
+            return True
+        if not self._free:
+            return False
+        new = heapq.heappop(self._free)
+        self.ref[new] = 1
+        leaves, treedef = jax.tree_util.tree_flatten(self.caches)
+        out = []
+        for leaf, ax in zip(leaves, self._seq_axes):
+            if ax is None:
+                out.append(leaf)
+                continue
+            blk = jnp.moveaxis(leaf, ax - 1, 0)
+            out.append(jnp.moveaxis(blk.at[new].set(blk[old]), 0, ax - 1))
+        self.caches = jax.tree_util.tree_unflatten(treedef, out)
+        self.table[slot, idx] = new
+        self._owned[slot][idx] = new
+        self.decref(old)
+        self.peak_blocks = max(self.peak_blocks, self.used_blocks)
+        self.cow_copies += 1
+        return True
+
+    # ------------------------------------------------------- suspend-to-host
+
+    def swap_out(self, slot: int) -> SwapState:
+        """Copy ``slot``'s resident state to host numpy and release its block
+        references: every owned block's contents per paged leaf (in table
+        order) plus the slot's row of every slot-indexed leaf.  Preemption
+        cost therefore scales with *resident bytes*, not prompt length."""
+        owned = list(self._owned[slot])
+        idx = jnp.asarray(np.asarray(owned, np.int32))
+        paged_host: List[np.ndarray] = []
+        state_host: List[np.ndarray] = []
+        for leaf, ax, sax in zip(jax.tree_util.tree_leaves(self.caches),
+                                 self._seq_axes, self._slot_axes):
+            if ax is None:
+                state_host.append(
+                    np.asarray(jnp.moveaxis(leaf, sax, 0)[slot]))
+            else:
+                blk = jnp.moveaxis(leaf, ax - 1, 0)
+                paged_host.append(np.asarray(blk[idx]) if owned
+                                  else np.asarray(blk[:0]))
+        self.free(slot)
+        return SwapState(n_blocks=len(owned), paged=paged_host,
+                         state=state_host)
+
+    def swap_in(self, slot: int, swap: SwapState) -> bool:
+        """Restore a ``swap_out`` snapshot into ``slot``: allocate fresh
+        blocks and write the host copies back bit-exact.  False (nothing
+        mutated) when the pool cannot back ``swap.n_blocks`` blocks.  The
+        target slot must be empty — the snapshot's block contents encode
+        positions [0, n_blocks * block_size), so restoring after existing
+        blocks would shift every position."""
+        if self._owned[slot]:
+            raise ValueError(
+                f"swap_in: slot {slot} already owns {len(self._owned[slot])} "
+                f"blocks — restore needs an empty table")
+        if not self.alloc(slot, swap.n_blocks):
+            return False
+        idx = jnp.asarray(np.asarray(self._owned[slot], np.int32))
+        leaves, treedef = jax.tree_util.tree_flatten(self.caches)
+        out, pi, si = [], 0, 0
+        for leaf, ax, sax in zip(leaves, self._seq_axes, self._slot_axes):
+            if ax is None:
+                moved = jnp.moveaxis(leaf, sax, 0)
+                moved = moved.at[slot].set(jnp.asarray(swap.state[si]))
+                out.append(jnp.moveaxis(moved, 0, sax))
+                si += 1
+            else:
+                blk = jnp.moveaxis(leaf, ax - 1, 0)
+                if swap.n_blocks:
+                    blk = blk.at[idx].set(jnp.asarray(swap.paged[pi]))
+                out.append(jnp.moveaxis(blk, 0, ax - 1))
+                pi += 1
+        self.caches = jax.tree_util.tree_unflatten(treedef, out)
+        return True
+
+    def check_invariants(self, active_pos: Optional[Dict[int, int]] = None,
+                         external_refs: Optional[Dict[int, int]] = None
                          ) -> None:
         """Raise if the pool bookkeeping is inconsistent (test/debug hook).
 
-        Always checked: every block id is exactly once in (free list) union
-        (some slot's owned list); each table row is its owner's block ids
-        followed by trash; no owned prefix entry is free or trash (the
-        cross-check against the free list — a table pointing at a freed or
-        trash block is exactly the read-after-free the fused kernel's
-        in-kernel table walk must never see).
+        Always checked: every block id is **free XOR refcounted >= 1** — a
+        freed block has refcount 0 and a live block's refcount equals the
+        number of table occurrences naming it plus its ``external_refs``
+        count (the prefix index's pins, supplied by the engine); each table
+        row is its owner's block ids followed by trash; no owned prefix
+        entry is free or trash (the cross-check against the free heap — a
+        table pointing at a freed or trash block is exactly the
+        read-after-free the fused kernel's in-kernel table walk must never
+        see).
 
         ``active_pos`` (slot -> current decode position) additionally proves
-        each active slot's whole read window is backed: positions
-        [0, pos] resolve through owned blocks only."""
+        each active slot's whole read window is backed — positions [0, pos]
+        resolve through live blocks only — and that the block backing the
+        *write* position ``pos`` is exclusively owned (refcount 1): the
+        copy-on-write invariant that a shared block is never mutated."""
         free = set(self._free)
-        assert len(free) == len(self._free), "free list holds duplicates"
-        assert TRASH_BLOCK not in free, "trash block leaked into free list"
-        seen = list(self._free)
+        assert len(free) == len(self._free), "free heap holds duplicates"
+        assert TRASH_BLOCK not in free, "trash block leaked into free heap"
+        counts: Dict[int, int] = dict(external_refs or {})
+        for pid in counts:
+            assert pid != TRASH_BLOCK and pid not in free, \
+                f"external ref on freed/trash block {pid}"
         for s, owned in self._owned.items():
-            seen.extend(owned)
+            assert len(set(owned)) == len(owned), \
+                f"slot {s} table names a block twice"
             row = self.table[s]
             assert list(row[:len(owned)]) == owned, (s, row, owned)
             assert (row[len(owned):] == TRASH_BLOCK).all(), (s, row)
@@ -221,14 +431,29 @@ class BlockPool:
                 assert pid != TRASH_BLOCK, f"slot {s} owns the trash block"
                 assert pid not in free, \
                     f"slot {s} table names freed block {pid} (read-after-free)"
-        assert sorted(seen) == list(range(1, self.n_blocks)), \
-            "block ids leaked or duplicated"
+                counts[pid] = counts.get(pid, 0) + 1
+        assert int(self.ref[TRASH_BLOCK]) == 0, "trash block is refcounted"
+        for pid in range(1, self.n_blocks):
+            ref = int(self.ref[pid])
+            if pid in free:
+                assert ref == 0, f"free block {pid} has refcount {ref}"
+                assert pid not in counts, \
+                    f"free block {pid} is still referenced"
+            else:
+                assert ref >= 1, f"block {pid} leaked (not free, refcount 0)"
+                assert ref == counts.get(pid, 0), (
+                    f"block {pid} refcount {ref} != {counts.get(pid, 0)} "
+                    f"live references (tables + external)")
         for s, pos in (active_pos or {}).items():
             need = self.blocks_for(pos + 1)
             assert need <= len(self._owned[s]), (
                 f"slot {s} decoding at pos {pos} needs {need} blocks but "
                 f"owns {len(self._owned[s])} — the kernel would walk into "
                 f"trash")
+            wb = self.write_block(s, pos)
+            assert int(self.ref[wb]) == 1, (
+                f"slot {s} is about to write position {pos} into block {wb} "
+                f"with refcount {int(self.ref[wb])} — COW must copy first")
 
     # --------------------------------------------------------------- seeding
 

@@ -40,12 +40,19 @@ class Request:
 
 @dataclasses.dataclass
 class RequestResult:
-    """Completed request: emitted tokens plus admission/finish ticks."""
+    """Completed request: emitted tokens plus admission/finish ticks.
+
+    ``rejected=True`` marks a request the engine refused at submit time
+    (oversize for the pool): ``tokens`` is empty, ``reason`` says why, and
+    the ticks are -1.  Recording a rejection instead of raising keeps one
+    bad request from killing every other in-flight request in the trace."""
 
     rid: int
     tokens: np.ndarray           # int32 [max_new_tokens]
     admitted_at: int = 0
     finished_at: int = 0
+    rejected: bool = False
+    reason: str = ""
 
 
 def synthetic_request(cfg, rng: np.random.Generator, rid: int,
@@ -80,3 +87,28 @@ def synthetic_trace(cfg, n_requests: int, prompt_len: int,
                               max_new_tokens=gen_lens[i % len(gen_lens)],
                               arrival=i * arrival_every)
             for i in range(n_requests)]
+
+
+def shared_prefix_trace(cfg, n_requests: int, prefix_len: int,
+                        suffix_len: int, gen_lens: Sequence[int],
+                        seed: int = 0, arrival_every: int = 0,
+                        n_prefixes: int = 1) -> List[Request]:
+    """The million-user-shaped trace: every request's token prompt is a
+    shared ``prefix_len``-token system prompt (one of ``n_prefixes``
+    variants, round-robin) followed by a per-request random
+    ``suffix_len``-token suffix.  Token-input families only — prefix
+    caching is keyed on tokens."""
+    if cfg.input_mode != "tokens":
+        raise ValueError("shared_prefix_trace needs a token-input family "
+                         f"(cfg.input_mode={cfg.input_mode!r})")
+    rng = np.random.default_rng(seed)
+    prefixes = [rng.integers(0, cfg.vocab, (prefix_len,)).astype(np.int32)
+                for _ in range(n_prefixes)]
+    reqs = []
+    for i in range(n_requests):
+        suffix = rng.integers(0, cfg.vocab, (suffix_len,)).astype(np.int32)
+        toks = np.concatenate([prefixes[i % n_prefixes], suffix])
+        reqs.append(Request(rid=i, inputs={"tokens": toks},
+                            max_new_tokens=gen_lens[i % len(gen_lens)],
+                            arrival=i * arrival_every))
+    return reqs

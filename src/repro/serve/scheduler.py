@@ -14,7 +14,8 @@ without touching a model.
 from __future__ import annotations
 
 import collections
-from typing import Callable, Deque, Dict, List, Optional, Tuple
+import heapq
+from typing import Callable, Deque, Dict, List, Optional, Set, Tuple
 
 from repro.serve.request import Request
 
@@ -27,15 +28,23 @@ class SlotScheduler:
     resource it needs is available — head-of-line blocking is deliberate, it
     preserves FCFS completion order.  ``preempt`` evicts an active request
     back to the *front* of the queue (paged pools preempt-to-queue when the
-    free block list runs dry mid-decode)."""
+    free block list runs dry mid-decode); ``suspend`` does the same but tags
+    the request as suspended-to-host — its KV state survives on the host and
+    readmission resumes it instead of replaying from prefill.
+
+    Free slots live in a min-heap (lowest slot id admitted first — the same
+    deterministic order the historical sorted-list kept, without the
+    O(n log n) re-sort on every release/preempt)."""
 
     def __init__(self, n_slots: int):
         if n_slots <= 0:
             raise ValueError(f"need n_slots > 0, got {n_slots}")
         self.n_slots = n_slots
-        self._free: List[int] = sorted(range(n_slots), reverse=True)
+        self._free: List[int] = list(range(n_slots))
+        heapq.heapify(self._free)
         self._queue: Deque[Request] = collections.deque()
         self._active: Dict[int, Request] = {}
+        self._suspended_rids: Set[int] = set()
         self._occupancy: List[int] = []      # active-slot count per tick
 
     # ------------------------------------------------------------- admission
@@ -59,8 +68,9 @@ class SlotScheduler:
                 break
             if fits is not None and not fits(self._queue[0]):
                 break
-            slot = self._free.pop()          # lowest free slot first
+            slot = heapq.heappop(self._free)  # lowest free slot first
             req = self._queue.popleft()
+            self._suspended_rids.discard(req.rid)
             self._active[slot] = req
             admitted.append((slot, req))
         return admitted
@@ -69,8 +79,7 @@ class SlotScheduler:
         if slot not in self._active:
             raise KeyError(f"slot {slot} is not active")
         del self._active[slot]
-        self._free.append(slot)
-        self._free.sort(reverse=True)
+        heapq.heappush(self._free, slot)
 
     def preempt(self, slot: int) -> Request:
         """Evict ``slot``'s request back to the FRONT of the queue (it will
@@ -78,10 +87,20 @@ class SlotScheduler:
         if slot not in self._active:
             raise KeyError(f"slot {slot} is not active")
         req = self._active.pop(slot)
-        self._free.append(slot)
-        self._free.sort(reverse=True)
+        heapq.heappush(self._free, slot)
         self._queue.appendleft(req)
         return req
+
+    def suspend(self, slot: int) -> Request:
+        """Preempt ``slot`` with suspend-to-host semantics: the request goes
+        back to the FRONT of the queue, tagged so the engine resumes its
+        swapped state on readmission instead of replaying from prefill."""
+        req = self.preempt(slot)
+        self._suspended_rids.add(req.rid)
+        return req
+
+    def is_suspended(self, rid: int) -> bool:
+        return rid in self._suspended_rids
 
     # ------------------------------------------------------------------ state
 
@@ -92,6 +111,11 @@ class SlotScheduler:
     @property
     def pending(self) -> int:
         return len(self._queue)
+
+    @property
+    def suspended(self) -> int:
+        """Queued requests whose state is swapped to host (resume on admit)."""
+        return len(self._suspended_rids)
 
     def has_work(self) -> bool:
         return bool(self._queue or self._active)

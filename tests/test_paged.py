@@ -329,14 +329,19 @@ def test_paged_preemption_requeues_and_tokens_survive():
     eng.pool.check_invariants()
 
 
-def test_paged_submit_rejects_request_larger_than_pool():
+def test_paged_submit_records_rejection_for_oversize_request():
+    """An oversize request must be recorded as a rejected result — not
+    raise out of submit and kill the rest of the trace (PR-7 fix)."""
     cfg, params = _model("llama3.2-1b")
     eng = ServeEngine(params, cfg, n_slots=1, max_len=16, kv="paged",
                       block_size=4, n_blocks=3)        # 2 usable blocks
     rng = np.random.default_rng(6)
-    with pytest.raises(ValueError, match="blocks"):
-        eng.submit(synthetic_request(cfg, rng, rid=0, prompt_len=8,
-                                     max_new_tokens=8))
+    eng.submit(synthetic_request(cfg, rng, rid=0, prompt_len=8,
+                                 max_new_tokens=8))
+    res = eng.results[0]
+    assert res.rejected and "blocks" in res.reason
+    assert res.tokens.size == 0 and res.finished_at == -1
+    assert eng.scheduler.pending == 0
 
 
 def test_engine_rejects_unknown_kv_layout():

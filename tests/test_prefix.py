@@ -1,0 +1,632 @@
+"""Prefix sharing, copy-on-write, and suspend-to-host regression net (PR 7).
+
+Load-bearing properties:
+
+* the prefix-cached engine is **token-for-token identical** to the
+  non-sharing paged engine (itself the slotted oracle's equal) while running
+  strictly fewer prefills — hits are table writes into refcounted blocks,
+  divergence copies-on-write, and the trie's pins never leak
+  (``check_invariants`` closes the free-XOR-refcounted accounting with the
+  index's ``block_refs``);
+* ``preempt="suspend"`` swaps a victim's resident state to host and resumes
+  it bit-exact — same tokens as the replay oracle in no more ticks — and
+  both preemption modes survive a victim caught mid prompt catch-up
+  (non-empty ``pending``);
+* the serve loop is robust: an oversize request records a rejection instead
+  of raising, occupancy samples exactly the ticks that decode, and the heap
+  free-lists (BlockPool + SlotScheduler) assign identically to the
+  historical sorted-list implementation (hypothesis property tests).
+"""
+
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                     # minimal env: keep the deterministic
+    from conftest import given, settings, st   # tests, skip the property ones
+
+from repro.configs import get_config
+from repro.models import init_model
+from repro.serve import (BlockPool, PrefixIndex, ServeEngine, SlotScheduler,
+                         shared_prefix_trace, synthetic_request,
+                         synthetic_trace)
+from repro.serve.paged import TRASH_BLOCK
+from repro.serve.request import Request
+
+_MODELS = {}
+
+
+def _model(arch="llama3.2-1b"):
+    if arch not in _MODELS:
+        cfg = get_config(arch, smoke=True)
+        cfg = cfg.replace(sparsity=dataclasses.replace(
+            cfg.sparsity, mode="compressed", impl="xla"))
+        params, _ = init_model(jax.random.PRNGKey(0), cfg)
+        _MODELS[arch] = (cfg, params)
+    return _MODELS[arch]
+
+
+def _pool(n_slots=3, max_len=16, block_size=4, n_blocks=None):
+    cfg, _ = _model()
+    return BlockPool(cfg, n_slots, max_len, block_size, n_blocks)
+
+
+# ---------------------------------------------------------------- PrefixIndex
+# unit-tested against a fake pool so the trie's refcount contract is checked
+# in isolation (one pool ref per distinct block id per node)
+
+class _FakePool:
+    def __init__(self):
+        self.ref = {}
+
+    def seed_refs(self, pids):
+        for p in set(pids):
+            self.ref[p] = self.ref.get(p, 0) + 1
+
+    def incref(self, pid):
+        if self.ref.get(pid, 0) < 1:
+            raise ValueError(f"incref on non-live block {pid}")
+        self.ref[pid] += 1
+
+    def decref(self, pid):
+        if self.ref.get(pid, 0) < 1:
+            raise ValueError(f"decref on non-live block {pid}")
+        self.ref[pid] -= 1
+
+
+def test_prefix_index_match_empty_and_full():
+    idx, pool = PrefixIndex(), _FakePool()
+    assert idx.match([1, 2, 3], now=0) == (0, [])
+    pool.seed_refs([10, 10, 11])
+    assert idx.insert([1, 2, 3], [10, 10, 11], now=0, pool=pool)
+    m, pids = idx.match([1, 2, 3, 4], now=1)
+    assert (m, pids) == (3, [10, 10, 11])
+    # the node pins each distinct block once
+    assert pool.ref == {10: 2, 11: 2}
+    assert idx.blocks == 2 and idx.cached_tokens == 3
+
+
+def test_prefix_index_partial_and_mid_edge_match():
+    idx, pool = PrefixIndex(), _FakePool()
+    pool.seed_refs([5, 5, 6, 6])
+    idx.insert([7, 8, 9, 1], [5, 5, 6, 6], now=0, pool=pool)
+    assert idx.match([7, 8], now=1) == (2, [5, 5])        # stops mid-edge
+    assert idx.match([7, 8, 9, 2], now=2) == (3, [5, 5, 6])  # diverges mid-edge
+    assert idx.match([8, 7], now=3) == (0, [])
+
+
+def test_prefix_index_split_keeps_boundary_block_refcounted():
+    """A block spanning the split point must end up pinned by BOTH halves
+    and never transit refcount 0 (the fake pool raises if it does)."""
+    idx, pool = PrefixIndex(), _FakePool()
+    pool.seed_refs([5, 5, 6, 6])
+    idx.insert([1, 2, 3, 4], [5, 5, 6, 6], now=0, pool=pool)
+    pool.seed_refs([5, 5, 6, 7])
+    # diverges at position 3 — inside the second block of the first insert
+    idx.insert([1, 2, 3, 9], [5, 5, 6, 7], now=1, pool=pool)
+    assert idx.nodes == 3                 # head [1,2,3] + tails [4], [9]
+    # head pins {5, 6}; tail [4] pins {6}; tail [9] pins {7}
+    refs = idx.block_refs()
+    assert refs == {5: 1, 6: 2, 7: 1}
+    m, pids = idx.match([1, 2, 3, 4], now=2)
+    assert (m, pids) == (4, [5, 5, 6, 6])
+    m, pids = idx.match([1, 2, 3, 9], now=3)
+    assert (m, pids) == (4, [5, 5, 6, 7])
+
+
+def test_prefix_index_insert_covered_span_is_noop():
+    idx, pool = PrefixIndex(), _FakePool()
+    pool.seed_refs([5, 5])
+    idx.insert([1, 2], [5, 5], now=0, pool=pool)
+    before = dict(pool.ref)
+    pool.seed_refs([9])                    # a would-be duplicate span
+    assert not idx.insert([1], [9], now=1, pool=pool)   # covered mid-edge
+    assert not idx.insert([1, 2], [9, 9], now=2, pool=pool)
+    assert pool.ref[5] == before[5]        # first writer wins, no churn
+
+
+def test_prefix_index_evicts_lru_leaf_first():
+    idx, pool = PrefixIndex(), _FakePool()
+    pool.seed_refs([5, 5, 6]), pool.seed_refs([5, 5, 7])
+    idx.insert([1, 2, 3], [5, 5, 6], now=0, pool=pool)
+    idx.insert([1, 2, 4], [5, 5, 7], now=1, pool=pool)
+    idx.match([1, 2, 3], now=5)            # protect the first leaf
+    assert idx.evict_lru(pool)             # drops leaf [4] (lru)
+    assert idx.match([1, 2, 4], now=6)[0] == 2   # only the shared head left
+    assert idx.match([1, 2, 3], now=7)[0] == 3
+    assert 7 not in idx.block_refs()
+    assert idx.evict_lru(pool) and idx.evict_lru(pool)
+    assert not idx.evict_lru(pool)         # empty trie
+    # every pin the index took has been released
+    assert idx.block_refs() == {}
+
+
+# --------------------------------------------------- BlockPool refcounts/COW
+
+def test_share_increfs_and_keeps_blocks_resident_after_free():
+    p = _pool(n_slots=2, max_len=8, block_size=4)
+    assert p.alloc(0, 2)
+    pids = list(p._owned[0])
+    p.share(1, pids)
+    assert [int(r) for r in p.ref[pids]] == [2, 2]
+    p.free(0)                              # slot 1 still references them
+    assert p.free_blocks == p.usable_blocks - 2
+    assert list(p.table[1, :2]) == pids
+    p.check_invariants()
+    p.free(1)
+    assert p.free_blocks == p.usable_blocks
+    p.check_invariants()
+
+
+def test_share_freed_block_is_use_after_free():
+    p = _pool(n_slots=2, max_len=8, block_size=4)
+    assert p.alloc(0, 1)
+    pid = p._owned[0][0]
+    p.free(0)
+    with pytest.raises(ValueError, match="use-after-free"):
+        p.share(1, [pid])
+    with pytest.raises(ValueError, match="non-live"):
+        p.incref(pid)
+    with pytest.raises(ValueError, match="non-live"):
+        p.decref(pid)
+
+
+def test_cow_is_noop_on_exclusive_block():
+    p = _pool(n_slots=1, max_len=8, block_size=4)
+    assert p.alloc(0, 1)
+    pid = p._owned[0][0]
+    assert p.cow(0, 2)
+    assert p._owned[0][0] == pid and p.cow_copies == 0
+
+
+def test_cow_copies_shared_block_and_preserves_contents():
+    p = _pool(n_slots=2, max_len=8, block_size=4)
+    assert p.alloc(0, 1)
+    old = p._owned[0][0]
+    # write a recognizable pattern into the shared block on every paged leaf
+    leaves, treedef = jax.tree_util.tree_flatten(p.caches)
+    out = []
+    for i, (leaf, ax) in enumerate(zip(leaves, p._seq_axes)):
+        if ax is None:
+            out.append(leaf)
+            continue
+        blk = jax.numpy.moveaxis(leaf, ax - 1, 0)
+        blk = blk.at[old].set(float(i + 1))
+        out.append(jax.numpy.moveaxis(blk, 0, ax - 1))
+    p.caches = jax.tree_util.tree_unflatten(treedef, out)
+    p.share(1, [old])
+    assert p.needs_cow(1, 0)
+    assert p.cow(1, 0)
+    new = p._owned[1][0]
+    assert new != old and p.cow_copies == 1
+    assert int(p.ref[old]) == 1 and int(p.ref[new]) == 1
+    for i, (leaf, ax) in enumerate(zip(
+            jax.tree_util.tree_leaves(p.caches), p._seq_axes)):
+        if ax is None:
+            continue
+        blk = np.asarray(jax.numpy.moveaxis(leaf, ax - 1, 0))
+        np.testing.assert_array_equal(blk[new], blk[old])   # bit-exact copy
+        assert (blk[new] == i + 1).all()
+    p.check_invariants(active_pos={0: 0, 1: 0})   # write blocks now exclusive
+
+
+def test_cow_returns_false_when_pool_dry():
+    p = _pool(n_slots=2, max_len=8, block_size=4, n_blocks=2)  # 1 usable
+    assert p.alloc(0, 1)
+    p.share(1, [p._owned[0][0]])
+    assert p.needs_cow(1, 0) and not p.cow(1, 0)
+    p.check_invariants()                   # failure left no partial state
+
+
+def test_check_invariants_catches_shared_write_block():
+    p = _pool(n_slots=2, max_len=8, block_size=4)
+    assert p.alloc(0, 1)
+    p.share(1, [p._owned[0][0]])
+    p.check_invariants()                   # passive state is consistent...
+    with pytest.raises(AssertionError, match="COW"):
+        p.check_invariants(active_pos={1: 0})   # ...but writing would mutate
+    with pytest.raises(AssertionError, match="refcount"):
+        p.ref[p._owned[0][0]] += 1         # corrupt: ref exceeds references
+        p.check_invariants()
+
+
+def test_check_invariants_counts_external_refs():
+    p = _pool(n_slots=1, max_len=8, block_size=4)
+    assert p.alloc(0, 2)
+    pid = p._owned[0][0]
+    p.incref(pid)                          # e.g. a prefix-index pin
+    with pytest.raises(AssertionError):
+        p.check_invariants()               # unexplained extra reference
+    p.check_invariants(external_refs={pid: 1})
+    p.free(0)
+    assert int(p.ref[pid]) == 1            # the pin keeps it resident
+    p.check_invariants(external_refs={pid: 1})
+    p.decref(pid)
+    p.check_invariants()
+
+
+# ------------------------------------------------------------ suspend-to-host
+
+def test_swap_round_trip_is_bit_exact():
+    p = _pool(n_slots=2, max_len=16, block_size=4)
+    assert p.alloc(0, 3)
+    rng = np.random.default_rng(3)
+    leaves, treedef = jax.tree_util.tree_flatten(p.caches)
+    p.caches = jax.tree_util.tree_unflatten(treedef, [
+        jax.numpy.asarray(rng.standard_normal(l.shape).astype(l.dtype))
+        for l in leaves])
+    owned = list(p._owned[0])
+    before_paged = [np.asarray(jax.numpy.moveaxis(l, ax - 1, 0))[owned]
+                    for l, ax in zip(jax.tree_util.tree_leaves(p.caches),
+                                     p._seq_axes) if ax is not None]
+    before_state = [np.asarray(jax.numpy.moveaxis(l, sax, 0))[0]
+                    for l, (ax, sax) in zip(
+                        jax.tree_util.tree_leaves(p.caches),
+                        zip(p._seq_axes, p._slot_axes)) if ax is None]
+    swap = p.swap_out(0)
+    assert swap.n_blocks == 3 and p.free_blocks == p.usable_blocks
+    assert swap.nbytes > 0
+    p.check_invariants()
+    # restore into a DIFFERENT slot: contents must follow the request
+    assert p.swap_in(1, swap)
+    p.check_invariants()
+    after_paged = [np.asarray(jax.numpy.moveaxis(l, ax - 1, 0))[p._owned[1]]
+                   for l, ax in zip(jax.tree_util.tree_leaves(p.caches),
+                                    p._seq_axes) if ax is not None]
+    after_state = [np.asarray(jax.numpy.moveaxis(l, sax, 0))[1]
+                   for l, (ax, sax) in zip(
+                       jax.tree_util.tree_leaves(p.caches),
+                       zip(p._seq_axes, p._slot_axes)) if ax is None]
+    for b, a in zip(before_paged, after_paged):
+        np.testing.assert_array_equal(b, a)
+    for b, a in zip(before_state, after_state):
+        np.testing.assert_array_equal(b, a)
+
+
+def test_swap_in_false_when_pool_cannot_back_it():
+    p = _pool(n_slots=2, max_len=16, block_size=4, n_blocks=4)  # 3 usable
+    assert p.alloc(0, 3)
+    swap = p.swap_out(0)
+    assert p.alloc(1, 1)                   # steal a block
+    assert not p.swap_in(0, swap)          # 2 free < 3 needed, nothing mutated
+    p.check_invariants()
+    p.free(1)
+    assert p.swap_in(0, swap)
+    p.check_invariants()
+
+
+# ------------------------------------- heap == sorted-list (property tests)
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.tuples(st.integers(0, 1), st.integers(0, 2),
+                          st.integers(1, 3)), max_size=30))
+def test_blockpool_heap_assigns_like_sorted_list(ops):
+    """The min-heap free list must hand out exactly the ids the historical
+    sorted-list implementation did, in the same order (deterministic serve
+    traces depend on it)."""
+    p = _pool(n_slots=3, max_len=16, block_size=4, n_blocks=8)
+    ref_free = sorted(range(1, 8))         # reference: plain sorted list
+    ref_owned = {s: [] for s in range(3)}
+    for kind, slot, n in ops:
+        if kind == 0:
+            n = min(n, p.table_width - len(ref_owned[slot]))
+            got = p.alloc(slot, n)
+            assert got == (len(ref_free) >= n)
+            if got:
+                ref_owned[slot] += [ref_free.pop(0) for _ in range(n)]
+        else:
+            p.free(slot)
+            ref_free = sorted(ref_free + ref_owned[slot])
+            ref_owned[slot] = []
+        assert {s: o for s, o in p._owned.items()} == ref_owned
+        p.check_invariants()
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.tuples(st.integers(0, 2), st.integers(0, 3)), max_size=30))
+def test_scheduler_heap_assigns_like_sorted_list(ops):
+    """SlotScheduler's heap must admit into the same slots, in the same
+    order, as the historical sorted free list."""
+    sched = SlotScheduler(4)
+    ref_free, ref_active, rid = sorted(range(4)), {}, 0
+    for kind, arg in ops:
+        if kind == 0:                      # submit + admit everything
+            sched.submit(Request(rid=rid, inputs={}, max_new_tokens=1))
+            rid += 1
+            for slot, req in sched.admit(now=0):
+                assert ref_free and slot == ref_free.pop(0)
+                ref_active[slot] = req.rid
+        elif kind == 1 and ref_active:     # release an active slot
+            slot = sorted(ref_active)[arg % len(ref_active)]
+            sched.release(slot)
+            del ref_active[slot]
+            ref_free = sorted(ref_free + [slot])
+        elif kind == 2 and ref_active:     # preempt back to the queue front
+            slot = sorted(ref_active)[arg % len(ref_active)]
+            sched.preempt(slot)
+            del ref_active[slot]
+            ref_free = sorted(ref_free + [slot])
+        assert sorted(sched._active) == sorted(ref_active)
+
+
+def test_scheduler_suspend_tags_and_admit_clears():
+    sched = SlotScheduler(1)
+    sched.submit(Request(rid=7, inputs={}, max_new_tokens=1))
+    [(slot, _)] = sched.admit(now=0)
+    sched.suspend(slot)
+    assert sched.is_suspended(7) and sched.suspended == 1
+    [(slot, req)] = sched.admit(now=0)
+    assert req.rid == 7 and not sched.is_suspended(7)
+
+
+# ------------------------------------------------------- engine: prefix hits
+
+def _prefix_engines(cfg, params, *, n_slots=2, max_len=16, block_size=4,
+                    n_blocks=None, preempt="replay"):
+    oracle = ServeEngine(params, cfg, n_slots=n_slots, max_len=max_len,
+                         kv="paged", block_size=block_size, n_blocks=n_blocks)
+    eng = ServeEngine(params, cfg, n_slots=n_slots, max_len=max_len,
+                      kv="paged", block_size=block_size, n_blocks=n_blocks,
+                      prefix_cache=True, preempt=preempt,
+                      debug_invariants=True)
+    return oracle, eng
+
+
+@pytest.mark.parametrize("arch", ["llama3.2-1b", "gemma2-9b"])
+def test_prefix_hits_match_oracle_with_zero_prefill_for_shared_span(arch):
+    """Two waves of shared-prefix requests: the second wave must hit the
+    trie, run NO prefill for the shared span, trigger copy-on-write (the
+    prefix ends mid-block), and emit the oracle's exact tokens."""
+    cfg, params = _model(arch)
+    # prefix_len 6 with block_size 4: the hit ends inside block 2 -> COW
+    reqs = shared_prefix_trace(cfg, n_requests=6, prefix_len=6, suffix_len=2,
+                               gen_lens=[3, 4], seed=1)
+    oracle, eng = _prefix_engines(cfg, params)
+    base = oracle.run(reqs)
+    shared = eng.run([dataclasses.replace(r) for r in reqs])
+    for r in reqs:
+        np.testing.assert_array_equal(base[r.rid].tokens,
+                                      shared[r.rid].tokens,
+                                      err_msg=f"rid={r.rid}")
+    st = eng.stats()
+    assert st["prefix_hits"] >= 4          # both waves after the first pair
+    assert st["prefix_hit_tokens"] >= 4 * 5
+    assert st["cow_copies"] > 0            # mid-block divergence copied
+    assert st["prefill_calls"] < len(reqs)
+    assert st["prefill_calls"] + st["prefix_hits"] == len(reqs)
+    assert oracle.stats()["prefill_calls"] == len(reqs)
+    eng.check_invariants()
+
+
+def test_prefix_index_survives_and_pins_across_idle_pool():
+    """After the trace drains, the index still pins its blocks — they are
+    resident (not free) and the invariant accounting closes through
+    ``block_refs``."""
+    cfg, params = _model()
+    reqs = shared_prefix_trace(cfg, n_requests=2, prefix_len=8, suffix_len=2,
+                               gen_lens=[2], seed=3)
+    _, eng = _prefix_engines(cfg, params)
+    eng.run(reqs)
+    st = eng.stats()
+    assert st["index_blocks"] > 0 and st["index_tokens"] > 0
+    assert eng.pool.used_blocks == st["index_blocks"]
+    eng.check_invariants()
+
+
+def test_prefix_eviction_unblocks_admission():
+    """A pool sized so cached-but-idle blocks must be LRU-evicted before the
+    next admission can allocate: eviction (not deadlock) is the outcome."""
+    cfg, params = _model()
+    # 6 usable blocks; each request spans <= 12 positions = 3 blocks; the
+    # index retains up to 2 blocks per retired prompt
+    reqs = shared_prefix_trace(cfg, n_requests=4, prefix_len=5, suffix_len=3,
+                               gen_lens=[4], seed=4, n_prefixes=2)
+    oracle = ServeEngine(params, cfg, n_slots=1, max_len=12, kv="paged",
+                         block_size=4, n_blocks=7)
+    base = oracle.run(reqs)
+    eng = ServeEngine(params, cfg, n_slots=1, max_len=12, kv="paged",
+                      block_size=4, n_blocks=7, prefix_cache=True,
+                      debug_invariants=True)
+    out = eng.run([dataclasses.replace(r) for r in reqs])
+    for r in reqs:
+        np.testing.assert_array_equal(base[r.rid].tokens, out[r.rid].tokens)
+    assert eng.index_evictions > 0
+    eng.check_invariants()
+
+
+def test_prefix_cache_disabled_for_slot_state_families():
+    """Families with slot-indexed state (regenerated only by prefill) must
+    never take the hit path even with prefix_cache on."""
+    cfg, params = _model("zamba2-7b")
+    reqs = shared_prefix_trace(cfg, n_requests=4, prefix_len=6, suffix_len=2,
+                               gen_lens=[2], seed=5)
+    eng = ServeEngine(params, cfg, n_slots=2, max_len=12, kv="paged",
+                      block_size=4, prefix_cache=True, debug_invariants=True)
+    oracle = ServeEngine(params, cfg, n_slots=2, max_len=12, kv="paged",
+                         block_size=4)
+    base = oracle.run(reqs)
+    out = eng.run([dataclasses.replace(r) for r in reqs])
+    st = eng.stats()
+    assert st["prefix_hits"] == 0 and st["index_blocks"] == 0
+    assert st["prefill_calls"] == len(reqs)
+    for r in reqs:
+        np.testing.assert_array_equal(base[r.rid].tokens, out[r.rid].tokens)
+
+
+# -------------------------------------------------- engine: suspend-to-host
+
+def test_suspend_matches_replay_oracle_under_preemption():
+    cfg, params = _model()
+    rng = np.random.default_rng(5)
+    reqs = [synthetic_request(cfg, rng, rid=i, prompt_len=4, max_new_tokens=6)
+            for i in range(3)]
+    slotted = ServeEngine(params, cfg, n_slots=3, max_len=12).run(reqs)
+    replay = ServeEngine(params, cfg, n_slots=3, max_len=12, kv="paged",
+                         block_size=2, n_blocks=11)
+    base = replay.run(reqs)
+    eng = ServeEngine(params, cfg, n_slots=3, max_len=12, kv="paged",
+                      block_size=2, n_blocks=11, preempt="suspend",
+                      debug_invariants=True)
+    out = eng.run(reqs)
+    assert replay.preemptions > 0 and eng.preemptions > 0
+    assert eng.swap_outs == eng.preemptions
+    assert eng.swap_ins == eng.swap_outs   # everything resumed
+    for r in reqs:
+        np.testing.assert_array_equal(slotted[r.rid].tokens,
+                                      base[r.rid].tokens)
+        np.testing.assert_array_equal(slotted[r.rid].tokens,
+                                      out[r.rid].tokens)
+    # suspend never recomputes an emitted token: it cannot take longer
+    assert eng.ticks <= replay.ticks
+    assert eng.stats()["swap_bytes_resident"] == 0   # all swapped back in
+
+
+def test_suspend_swaps_slot_indexed_state_for_hybrid_family():
+    """zamba2 keeps SSM state and conv tails slot-indexed (not paged):
+    suspend must swap that state out and back too — replay regenerated it
+    via prefill, suspend skips prefill, so a miss here decodes from zeroed
+    state and diverges."""
+    cfg, params = _model("zamba2-7b")
+    rng = np.random.default_rng(6)
+    reqs = [synthetic_request(cfg, rng, rid=i, prompt_len=4, max_new_tokens=6)
+            for i in range(3)]
+    slotted = ServeEngine(params, cfg, n_slots=3, max_len=12).run(reqs)
+    eng = ServeEngine(params, cfg, n_slots=3, max_len=12, kv="paged",
+                      block_size=2, n_blocks=11, preempt="suspend",
+                      debug_invariants=True)
+    out = eng.run(reqs)
+    assert eng.swap_outs > 0 and eng.swap_ins == eng.swap_outs
+    for r in reqs:
+        np.testing.assert_array_equal(slotted[r.rid].tokens,
+                                      out[r.rid].tokens, err_msg=f"rid={r.rid}")
+
+
+@pytest.mark.parametrize("mode", ["replay", "suspend"])
+def test_preempt_mid_catchup_preserves_tokens(mode):
+    """Preemption must be safe for a slot still consuming its prompt
+    (non-empty ``pending``: bucketed-down prefill catch-up).  prompt_len 11
+    with buckets (4, 8) prefills 8 and leaves 2 pending ticks; the tight
+    pool forces preemption during them."""
+    cfg, params = _model()
+    rng = np.random.default_rng(8)
+    reqs = [synthetic_request(cfg, rng, rid=i, prompt_len=11,
+                              max_new_tokens=4) for i in range(3)]
+    slotted = ServeEngine(params, cfg, n_slots=3, max_len=16).run(reqs)
+    eng = ServeEngine(params, cfg, n_slots=3, max_len=16, kv="paged",
+                      block_size=2, n_blocks=15, prefill_buckets=(4, 8, 16),
+                      preempt=mode, debug_invariants=True)
+    preempted_pending = []
+    orig = eng._preempt
+
+    def spy(slot, now):
+        preempted_pending.append(len(eng._slots[slot].pending))
+        orig(slot, now)
+
+    eng._preempt = spy
+    out = eng.run(reqs)
+    assert eng.preemptions > 0
+    assert any(n > 0 for n in preempted_pending), \
+        f"no victim was mid-catch-up (pending at preemption: " \
+        f"{preempted_pending}) — the trace no longer exercises satellite 5"
+    for r in reqs:
+        np.testing.assert_array_equal(slotted[r.rid].tokens,
+                                      out[r.rid].tokens, err_msg=f"rid={r.rid}")
+
+
+# ------------------------------------------- serve-loop robustness satellites
+
+@pytest.mark.parametrize("kv", ["slotted", "paged"])
+def test_oversize_request_is_rejected_not_fatal(kv):
+    """One oversize request in a mixed trace: the rest must complete and the
+    reject must be recorded as a result (PR-7 crash fix)."""
+    cfg, params = _model()
+    kw = dict(kv="paged", block_size=4, n_blocks=9) if kv == "paged" else {}
+    eng = ServeEngine(params, cfg, n_slots=2, max_len=16, **kw)
+    rng = np.random.default_rng(11)
+    good = [synthetic_request(cfg, rng, rid=i, prompt_len=5, max_new_tokens=3)
+            for i in range(3)]
+    bad = synthetic_request(cfg, rng, rid=99, prompt_len=20, max_new_tokens=20)
+    results = eng.run(good[:1] + [bad] + good[1:])
+    assert results[99].rejected and results[99].tokens.size == 0
+    assert eng.stats()["rejected"] == 1
+    oracle = ServeEngine(params, cfg, n_slots=2, max_len=16).run(good)
+    for r in good:
+        assert not results[r.rid].rejected
+        np.testing.assert_array_equal(oracle[r.rid].tokens,
+                                      results[r.rid].tokens)
+
+
+def test_occupancy_samples_exactly_the_decoding_ticks():
+    """Regression (satellite 1): occupancy used to be sampled before
+    ``step()``, counting phantom slots on ticks whose slots all got
+    preempted; now samples == decode_steps exactly, on an exhaustion trace
+    with real preemptions."""
+    cfg, params = _model()
+    rng = np.random.default_rng(5)
+    reqs = [synthetic_request(cfg, rng, rid=i, prompt_len=4, max_new_tokens=6)
+            for i in range(3)]
+    eng = ServeEngine(params, cfg, n_slots=3, max_len=12, kv="paged",
+                      block_size=2, n_blocks=11)
+    eng.run(reqs)
+    assert eng.preemptions > 0
+    assert len(eng.scheduler._occupancy) == eng.decode_steps
+    assert 0 < eng.stats()["occupancy"] <= 1
+    # slotted engines sample the same way
+    eng2 = ServeEngine(params, cfg, n_slots=2, max_len=12)
+    eng2.run(reqs)
+    assert len(eng2.scheduler._occupancy) == eng2.decode_steps
+
+
+def test_slotted_stats_split_state_from_kv():
+    """Regression (satellite 2): the slotted ``kv_bytes_resident`` lumped
+    slot-indexed state (SSM state, conv tails, cross K/V) in with the KV
+    stream; it must now mirror the paged split."""
+    cfg, params = _model("whisper-small")
+    eng = ServeEngine(params, cfg, n_slots=1, max_len=8)
+    st = eng.stats()
+    assert st["kv_bytes_resident"] > 0     # decoder self K/V has a seq axis
+    assert st["kv_state_bytes"] > 0        # encoder cross K/V is slot-indexed
+    total = sum(l.nbytes for l in jax.tree_util.tree_leaves(eng.caches))
+    assert st["kv_bytes_resident"] + st["kv_state_bytes"] == total
+    # pure-SSM family: nothing has a sequence axis, everything is state
+    cfg2, params2 = _model("falcon-mamba-7b")
+    st2 = ServeEngine(params2, cfg2, n_slots=1, max_len=8).stats()
+    assert st2["kv_bytes_resident"] == 0 and st2["kv_state_bytes"] > 0
+
+
+# --------------------------------------------- invariants under mixed churn
+
+@settings(max_examples=15, deadline=None)
+@given(st.lists(st.tuples(st.integers(0, 4), st.integers(0, 2),
+                          st.integers(0, 7)), max_size=25))
+def test_refcount_invariants_under_random_share_cow_swap(ops):
+    """Free-XOR-refcounted holds under arbitrary interleavings of alloc,
+    free, share, cow, and swap round-trips."""
+    p = _pool(n_slots=3, max_len=16, block_size=4, n_blocks=8)
+    swaps = {}
+    for kind, slot, arg in ops:
+        if kind == 0:
+            n = arg % (p.table_width - len(p._owned[slot]) + 1)
+            p.alloc(slot, n)
+        elif kind == 1:
+            p.free(slot)
+        elif kind == 2:                    # share a random live block
+            donors = [pid for s, o in p._owned.items() if s != slot
+                      for pid in o if pid not in p._owned[slot]]
+            if donors and len(p._owned[slot]) < p.table_width:
+                p.share(slot, [donors[arg % len(donors)]])
+        elif kind == 3:                    # cow the slot's last-owned block
+            if p._owned[slot]:
+                pos = (len(p._owned[slot]) - 1) * p.block_size
+                if p.cow(slot, pos):
+                    assert int(p.ref[p.write_block(slot, pos)]) == 1
+        else:                              # swap out, maybe back in
+            if slot in swaps and not p._owned[slot]:
+                p.swap_in(slot, swaps.pop(slot))
+            elif slot not in swaps and p._owned[slot]:
+                swaps[slot] = p.swap_out(slot)
+        p.check_invariants()

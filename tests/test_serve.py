@@ -278,13 +278,16 @@ def test_seed_caches_clip_long_prompt(arch):
 
 # ----------------------------------------------------------------- guardrails
 
-def test_engine_rejects_oversized_request():
+def test_engine_records_rejection_for_oversized_request():
     cfg, params = _model("llama3.2-1b")
     eng = ServeEngine(params, cfg, n_slots=1, max_len=8)
     rng = np.random.default_rng(6)
-    with pytest.raises(ValueError, match="exceeds pool max_len"):
-        eng.submit(synthetic_request(cfg, rng, rid=0, prompt_len=8,
-                                     max_new_tokens=4))
+    eng.submit(synthetic_request(cfg, rng, rid=0, prompt_len=8,
+                                 max_new_tokens=4))
+    res = eng.results[0]
+    assert res.rejected and "max_len" in res.reason
+    assert res.tokens.size == 0 and res.finished_at == -1
+    assert eng.scheduler.pending == 0
 
 
 def test_single_token_request_served_by_prefill_alone():
