@@ -276,50 +276,75 @@ class ServeEngine:
         return (self.index is not None and self._all_paged
                 and set(req.inputs) == {"tokens"})
 
-    def _match(self, req: Request, now: int) -> Tuple[int, List[int]]:
-        """Longest cached prefix of ``req``'s prompt: ``(m, blocks)`` where
-        ``blocks`` back positions [0, m).  Capped at ``prompt_len - 1`` —
-        the last prompt token always feeds through decode to produce the
-        first logits (they are not cached)."""
+    def _match(self, req: Request, now: int
+               ) -> "tuple[int, List[int], Optional[object]]":
+        """Longest cached prefix of ``req``'s prompt: ``(m, blocks, node)``
+        where ``blocks`` back positions [0, m) and ``node`` is the deepest
+        trie node on the match path (for ``_reclaim``'s eviction pin).
+        Capped at ``prompt_len - 1`` — the last prompt token always feeds
+        through decode to produce the first logits (they are not cached).
+
+        The per-token pids collapse to one block per ``block_size`` span by
+        taking the pid at each span's **last** matched position.  A match
+        that crosses a radix-node boundary mid-block (prompts X+A then X+B
+        retired with ``len(X) % block_size != 0``) sees two pids inside the
+        boundary span: the older branch's block, whose positions past the
+        boundary hold *that* branch's KV, and the later branch's
+        copy-on-write block, which copied the span before diverging and so
+        holds the full history consistent with the matched tokens.  The
+        last position's pid is always the latter."""
         if not self._prefix_cacheable(req):
-            return 0, []
+            return 0, [], None
         toks = np.asarray(req.inputs["tokens"])[:req.prompt_len - 1]
-        m, pids = self.index.match(toks, now)
+        m, pids, node = self.index.match_path(toks, now)
         if m <= 0:
-            return 0, []
-        return m, [pids[i] for i in range(0, m, self.pool.block_size)]
+            return 0, [], None
+        bs = self.pool.block_size
+        return (m, [pids[min(i + bs - 1, m - 1)] for i in range(0, m, bs)],
+                node)
 
     def _fits(self, req: Request, now: int) -> bool:
         """Block-aware admission gate.  A prefix hit shrinks the fresh-block
         need to one (the shared span is a table write; the first divergent
-        write needs one block for COW/growth); a suspended request needs
-        exactly its swapped resident set back.  When the free heap is short,
-        LRU-evict the prefix index before refusing — cached-but-idle blocks
-        must never starve admission."""
+        write needs one block for COW/growth) and **pins its match path**
+        while reclaiming — otherwise the eviction loop could drop the very
+        nodes that justified the one-block need, and admission's re-match
+        would require full-prefill blocks this gate never reserved.  A
+        suspended request needs exactly its swapped resident set back.  When
+        the free heap is short, LRU-evict the prefix index before refusing —
+        cached-but-idle blocks must never starve admission."""
         if req.rid in self._suspended:
-            need = max(self._suspended[req.rid].swap.n_blocks, 1)
-        else:
-            m, _ = self._match(req, now)
-            need = (1 if m > 0
-                    else self.pool.blocks_for(self._seed_positions(req)))
-        return self._reclaim(need)
+            return self._reclaim(
+                max(self._suspended[req.rid].swap.n_blocks, 1))
+        m, _, node = self._match(req, now)
+        if m > 0 and self._reclaim(1, protect=(node,)):
+            return True
+        # no hit — or the pool is so pinned by the match's own path that one
+        # free block cannot be reclaimed around it: fall back to the full-
+        # prefill need with nothing protected (admission re-matches and
+        # shares whatever smaller hit survives the eviction)
+        return self._reclaim(self.pool.blocks_for(self._seed_positions(req)))
 
-    def _reclaim(self, need: int) -> bool:
+    def _reclaim(self, need: int, protect: Sequence = ()) -> bool:
         """Evict LRU prefix-index entries until ``need`` blocks are free (or
-        nothing is left to evict).  True when the allocation can proceed."""
+        nothing evictable is left); ``protect`` exempts the current
+        admission's match path.  True when the allocation can proceed."""
         while not self.pool.can_alloc(need):
-            if self.index is None or not self.index.evict_lru(self.pool):
+            if self.index is None or not self.index.evict_lru(
+                    self.pool, protect=protect):
                 return False
             self.index_evictions += 1
         return True
 
-    def _admit(self, slot: int, req: Request, now: int) -> None:
+    def _admit(self, slot: int, req: Request, now: int) -> bool:
+        """Install ``req`` into ``slot``.  Returns False when a paged
+        admission backed out (the blocks the fits-gate sized against are
+        gone by allocation time): the request is requeued at the queue
+        front, the slot freed, and the caller stops admitting this tick."""
         if self.kv == "paged":
             if req.rid in self._suspended:
-                self._resume(slot, req, now)
-                return
-            self._admit_paged(slot, req, now)
-            return
+                return self._resume(slot, req, now)
+            return self._admit_paged(slot, req, now)
         self.prefill_lengths.add(req.prompt_len)
         self.prefill_calls += 1
         batch = {k: jnp.asarray(v)[None] for k, v in req.inputs.items()}
@@ -335,15 +360,16 @@ class ServeEngine:
         self.active[slot] = True
         if req.max_new_tokens <= 1:          # satisfied by prefill alone
             self._retire(slot, now)
+        return True
 
-    def _admit_paged(self, slot: int, req: Request, now: int) -> None:
+    def _admit_paged(self, slot: int, req: Request, now: int) -> bool:
         plen = req.prompt_len
         # prefix-cache hit: the shared span is already resident — point the
         # slot's table at the cached blocks (a table write, zero prefill)
         # and replay only the divergent suffix through forced decode steps.
         # Re-matched here (not reused from _fits) so an eviction between the
         # two calls can never hand out a freed block.
-        m, shared = self._match(req, now)
+        m, shared, _ = self._match(req, now)
         if m > 0:
             self.pool.share(slot, shared)
             toks = np.asarray(req.inputs["tokens"])
@@ -355,12 +381,16 @@ class ServeEngine:
             self.active[slot] = True
             self.prefix_hits += 1
             self.prefix_hit_tokens += m
-            return
+            return True
         pb, pad_up = self._plan(req)
         n_seed = plen if pad_up else pb
         if not self.pool.alloc(slot, self.pool.blocks_for(n_seed)):
-            raise RuntimeError("admission without enough free blocks "
-                               "(scheduler fits-gate should prevent this)")
+            # the fits-gate sized this admission against a state (a prefix
+            # match, its pinned path) that no longer holds — back out
+            # instead of killing the run: requeue at the queue front and
+            # retry once retirements/evictions refill the free heap
+            self.scheduler.preempt(slot)
+            return False
         # build the bucketed prefill batch: bucket-down truncates the token
         # prompt (remainder replays through decode), pad-up right-pads the
         # prompt itself (positions >= plen never reach earlier logits and
@@ -395,6 +425,7 @@ class ServeEngine:
         self.active[slot] = True
         if st.tokens and req.max_new_tokens <= 1:
             self._retire(slot, now)
+        return True
 
     def _retire(self, slot: int, now: int) -> None:
         st = self._slots.pop(slot)
@@ -440,18 +471,22 @@ class ServeEngine:
         self.tok[slot] = 0
         self.preemptions += 1
 
-    def _resume(self, slot: int, req: Request, now: int) -> None:
+    def _resume(self, slot: int, req: Request, now: int) -> bool:
         """Re-admit a suspended request: swap its resident state back in and
-        continue exactly where it stopped — no prefill, no token replay."""
+        continue exactly where it stopped — no prefill, no token replay.
+        Backs out (False: re-suspended at the queue front) if the pool
+        cannot back the swapped blocks despite the fits-gate."""
         sus = self._suspended.pop(req.rid)
         if not self.pool.swap_in(slot, sus.swap):
-            raise RuntimeError("resume without enough free blocks "
-                               "(scheduler fits-gate should prevent this)")
+            self._suspended[req.rid] = sus
+            self.scheduler.suspend(slot)
+            return False
         self._slots[slot] = sus.state
         self.pos[slot] = sus.pos
         self.tok[slot] = sus.tok
         self.active[slot] = True
         self.swap_ins += 1
+        return True
 
     def _prepare_slots(self, now: int) -> None:
         """Make every active slot writable for this tick: lazily back its
@@ -535,7 +570,8 @@ class ServeEngine:
                         t, fits=lambda r: self._fits(r, t), limit=1)
                     if not pairs:
                         break
-                    self._admit(pairs[0][0], pairs[0][1], t)
+                    if not self._admit(pairs[0][0], pairs[0][1], t):
+                        break                # backed out: retry next tick
             else:
                 for slot, req in self.scheduler.admit(t):
                     self._admit(slot, req, t)

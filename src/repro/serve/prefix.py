@@ -59,8 +59,6 @@ class PrefixIndex:
     def __init__(self):
         self._root = _Node([], [], None, -1)
         self.nodes = 0                       # non-root node count
-        self.hits = 0
-        self.insertions = 0
 
     # -------------------------------------------------------------- matching
 
@@ -68,9 +66,22 @@ class PrefixIndex:
               ) -> Tuple[int, List[int]]:
         """Longest cached prefix of ``tokens``: returns ``(m, pids)`` where
         ``pids[i]`` backs position ``i`` for ``i < m``.  Touches every node
-        on the match path (LRU protection)."""
+        on the match path (LRU protection).  Hit accounting lives in the
+        engine (``ServeEngine.prefix_hits``) — match runs more than once per
+        admission (fits-gate + admission), so a counter here would lie."""
+        m, pids, _ = self.match_path(tokens, now)
+        return m, pids
+
+    def match_path(self, tokens: Sequence[int], now: int
+                   ) -> Tuple[int, List[int], Optional[_Node]]:
+        """``match`` plus the deepest node on the match path (None when
+        ``m == 0``).  Callers hand that node to ``evict_lru(protect=...)``
+        so the eviction loop cannot drop the very match it is making room
+        for (its ancestors cannot become leaves while it lives, so pinning
+        the deepest node pins the whole path)."""
         tokens = [int(t) for t in tokens]
         node, m, pids = self._root, 0, []
+        deepest: Optional[_Node] = None
         while m < len(tokens):
             child = node.children.get(tokens[m])
             if child is None:
@@ -82,12 +93,11 @@ class PrefixIndex:
             child.last_used = now
             pids.extend(child.pids[:i])
             m += i
+            deepest = child
             if i < len(child.key):           # diverged (or ran out) mid-edge
                 break
             node = child
-        if m:
-            self.hits += 1
-        return m, pids
+        return m, pids, deepest
 
     # ------------------------------------------------------------- insertion
 
@@ -112,7 +122,6 @@ class PrefixIndex:
                 for pid in set(new.pids):
                     pool.incref(pid)
                 self.nodes += 1
-                self.insertions += 1
                 return True
             j = 0
             while (j < len(child.key) and i < len(tokens)
@@ -150,15 +159,21 @@ class PrefixIndex:
 
     # -------------------------------------------------------------- eviction
 
-    def evict_lru(self, pool) -> bool:
+    def evict_lru(self, pool, protect: Sequence[_Node] = ()) -> bool:
         """Drop the least-recently-used *leaf* node, releasing its block
-        pins.  Returns False when the trie is empty (nothing to evict)."""
+        pins.  Nodes in ``protect`` are exempt — the engine pins the deepest
+        node of an in-flight admission's match path, whose ancestors cannot
+        become leaves while it lives, so the whole matched path survives the
+        eviction loop that is making room for it.  Returns False when
+        nothing evictable is left (empty trie, or only protected leaves)."""
         victim: Optional[_Node] = None
         stack = list(self._root.children.values())
         while stack:
             n = stack.pop()
             if n.children:
                 stack.extend(n.children.values())
+            elif n in protect:
+                continue
             elif victim is None or n.last_used < victim.last_used:
                 victim = n
         if victim is None:
