@@ -32,6 +32,7 @@ from repro.kernels import ref as kref
 
 Impl = str  # 'auto' | 'ref' | 'xla' | 'xla_gather' | 'pallas' | 'pallas_interpret'
             # | 'spmv' | 'spmv_gather' | 'spmv_onehot' | 'spmv_interpret'
+            # | 'ring' (TP serving: explicit sparse ring collective)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -66,6 +67,15 @@ class SparsityConfig:
     # decode-serving win comes from TP-only weight rules instead
     # (falcon_tponly, 4.5x).
     gather_compressed: bool = False
+    # TP serving (PR 8): route decode-shaped compressed matmuls through the
+    # explicit sparse ring (dist.collectives.collective_matmul_ag_sparse)
+    # when an axis_rules mesh with a "model" axis is active — the compressed
+    # shard is what rotates between devices, decompress happens locally at
+    # each consumer (the paper's Fig 12 traffic property, cluster-scale).
+    # Falls back to the local xla path per call-site when the output dim
+    # doesn't divide over the mesh or no mesh is active, so the flag is safe
+    # to leave on for mixed-size models.
+    decode_ring: bool = False
 
     def applies(self, in_dim: int, out_dim: int) -> bool:
         return (self.enabled and self.mode != "dense"
@@ -140,12 +150,35 @@ def select_impl(cfg: SparsityConfig, x_shape: Tuple[int, ...]) -> Impl:
     if cfg.impl != "auto":
         return cfg.impl
     if is_decode_shape(x_shape, cfg.decode_batch_max):
+        if cfg.decode_ring and _ring_mesh() is not None:
+            return "ring"
         if cfg.decode_impl != "auto":
             return cfg.decode_impl
         if jax.default_backend() == "tpu":
             return "spmv_onehot" if cfg.spmv_mode == "onehot" else "spmv"
         return "xla"
     return default_impl(x_shape)
+
+
+def _ring_mesh():
+    """The active axis_rules mesh, if it has the serving TP axis."""
+    from repro.dist.api import current_mesh
+    mesh = current_mesh()
+    if mesh is not None and "model" in getattr(mesh, "shape", {}):
+        return mesh
+    return None
+
+
+def _xwt_ring(x, values, indices, n, m, gather_compressed=True):
+    """Sparse ring collective matmul; local-xla fallback when the shard
+    doesn't fit the mesh (output rows must split evenly over "model")."""
+    mesh = _ring_mesh()
+    o = values.shape[-2]
+    if mesh is None or mesh.shape["model"] == 1 or o % mesh.shape["model"]:
+        return _xwt_xla(x, values, indices, n, m,
+                        gather_compressed=gather_compressed)
+    from repro.dist.collectives import ring_sparse_linear
+    return ring_sparse_linear(x, values, indices, n, m, mesh, axis="model")
 
 
 def nm_matmul(x: jax.Array, sp: NMSparse, impl: Impl = "auto",
@@ -161,6 +194,9 @@ def nm_matmul(x: jax.Array, sp: NMSparse, impl: Impl = "auto",
     if impl == "xla":
         return _xwt_xla(x, sp.values, sp.indices, n, m,
                         gather_compressed=gather_compressed)
+    if impl == "ring":
+        return _xwt_ring(x, sp.values, sp.indices, n, m,
+                         gather_compressed=gather_compressed)
     if impl == "xla_gather":
         return _xwt_xla_gather(x, sp.values, sp.indices, n, m)
     if impl == "pallas":

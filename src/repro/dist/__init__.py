@@ -8,16 +8,19 @@ scale: whenever a sparse operand crosses a device boundary it travels in the
 decompressed locally at the consumer — never shipped dense.
 """
 
-from repro.dist.api import (DEFAULT_RULES, MULTIPOD_RULES, axis_rules,
-                            constrain, logical_to_pspec, make_shardings)
+from repro.dist.api import (DEFAULT_RULES, MULTIPOD_RULES, SERVE_TP_RULES,
+                            axis_rules, constrain, logical_to_pspec,
+                            make_serve_mesh, make_shardings)
 from repro.dist.elastic import choose_mesh, degraded_meshes
 
 __all__ = [
     "DEFAULT_RULES",
     "MULTIPOD_RULES",
+    "SERVE_TP_RULES",
     "axis_rules",
     "constrain",
     "logical_to_pspec",
+    "make_serve_mesh",
     "make_shardings",
     "choose_mesh",
     "degraded_meshes",

@@ -57,8 +57,47 @@ MULTIPOD_RULES: Dict[str, Optional[Tuple[str, ...]]] = {
 }
 
 
+# Serving: tensor-parallel only.  A decode batch is a handful of slots, so
+# there is no data axis worth sharding — weight output-feature axes and the
+# per-head activation/KV axes split over "model", everything else (block
+# tables, positions, scalars, expert stacks) replicates.  Keeping "fsdp"/"ep"
+# at None is what makes the single-device engine a valid oracle: no weight
+# gathers, no expert redistribution, identical per-element reduction order.
+SERVE_TP_RULES: Dict[str, Optional[Tuple[str, ...]]] = {
+    "tp": ("model",),
+    "fsdp": None,
+    "ep": None,
+    "act_batch": None,
+    "act_seq": None,
+    "act_seq_sp": None,
+    "act_heads": ("model",),
+    "act_vocab": ("model",),
+    "act_ep": None,
+}
+
+
 def default_rules_for(mesh) -> Dict[str, Optional[Tuple[str, ...]]]:
     return MULTIPOD_RULES if "pod" in mesh.axis_names else DEFAULT_RULES
+
+
+def make_serve_mesh(tp: Optional[int] = None, devices=None):
+    """1-D ("model",) mesh over the first ``tp`` devices (all by default).
+
+    This is the serving mesh shape: one axis, every device a ring neighbor.
+    CI gets multi-device on one host via
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` (must be set
+    before jax initializes its backends).
+    """
+    import numpy as np
+    from jax.sharding import Mesh
+    devs = list(devices) if devices is not None else list(jax.devices())
+    tp = tp if tp else len(devs)
+    if tp > len(devs):
+        raise ValueError(
+            f"tp={tp} but only {len(devs)} devices are visible; on CPU, set "
+            "XLA_FLAGS=--xla_force_host_platform_device_count=N before "
+            "importing jax")
+    return Mesh(np.array(devs[:tp]), ("model",))
 
 
 # ----------------------------------------------------------------- resolution

@@ -122,3 +122,52 @@ def ring_step_bytes(o_shard: int, k: int, n: int = 2, m: int = 4, *,
         index_bytes = nnz               # int8 stream
     return dict(value_bytes=value_bytes, index_bytes=index_bytes,
                 total_bytes=value_bytes + index_bytes)
+
+
+def ring_matmul_bytes(o: int, k: int, ndev: int, n: int = 2, m: int = 4, *,
+                      dtype_bytes: int = 2, sparse: bool = True,
+                      packed: bool = True) -> int:
+    """Total wire bytes for one full ring matmul (all devices, all steps).
+
+    Every device rotates its held shard ndev-1 times, so the ring moves
+    ndev*(ndev-1) shard-transfers of ring_step_bytes each.  With sparse=False
+    this models the dense-weight ring (the baseline the compressed ring is
+    compared against in benchmarks/serve_dist.py).
+    """
+    per_step = ring_step_bytes(o // ndev, k, n, m, dtype_bytes=dtype_bytes,
+                               sparse=sparse, packed=packed)["total_bytes"]
+    return ndev * (ndev - 1) * per_step
+
+
+def _shard_map_norep(fn, mesh, in_specs, out_specs):
+    """shard_map with replication checking off, across the
+    check_rep -> check_vma rename (jax 0.4.x -> 0.5+)."""
+    import inspect
+    from jax.experimental.shard_map import shard_map
+    params = inspect.signature(shard_map).parameters
+    kw = "check_rep" if "check_rep" in params else "check_vma"
+    return shard_map(fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                     **{kw: False})
+
+
+def ring_sparse_linear(x: jax.Array, values: jax.Array, indices: jax.Array,
+                       n: int, m: int, mesh, axis: str = "model"
+                       ) -> jax.Array:
+    """y = x @ decompress(values, indices).T via the explicit sparse ring.
+
+    Jit-level wrapper around ``collective_matmul_ag_sparse``: takes the
+    *global* compressed operands (values/indices ``[..., O, nnz]`` sharded or
+    shardable on O over ``axis``), flattens x's leading dims, runs the
+    shard_map'd ring, and restores the leading dims.  Bitwise-equal to the
+    local ``_xwt_xla`` path because every device computes x @ w_dense.T for
+    each shard with the same contraction order.
+    """
+    from jax.sharding import PartitionSpec as P
+    o = values.shape[-2]
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    f = _shard_map_norep(
+        lambda v, i, xl: collective_matmul_ag_sparse(v, i, xl, axis, n, m),
+        mesh=mesh, in_specs=(P(axis), P(axis), P()), out_specs=P())
+    y = f(values, indices, x2)
+    return y.reshape(*lead, o).astype(x.dtype)

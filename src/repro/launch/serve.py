@@ -26,6 +26,17 @@ point their block table at the resident blocks (refcounted, copy-on-write)
 and skip prefill for the shared span.  ``--preempt suspend`` swaps a
 pool-exhaustion victim's KV to host numpy and resumes it bit-exact instead
 of replaying from prefill (the ``replay`` default).
+``--tp N`` (or ``--mesh model=N``) serves tensor-parallel over the first N
+devices (continuous scheduler only): params and KV pools shard under
+``dist.api.SERVE_TP_RULES``, tokens stay identical to the single-device
+run, and with ``--weights compressed`` the decode forward rides the sparse
+ring collective so only compressed bytes cross the interconnect.  Works
+single-process on CPU via
+``XLA_FLAGS=--xla_force_host_platform_device_count=N`` (set it before
+launching — jax fixes its device list at backend init), and multi-process
+via ``--distributed`` (``jax.distributed.initialize``; pass
+``--coordinator host:port --num-processes P --process-id I`` explicitly or
+let jax pick them up from the cluster environment).
 ``serve`` is kept as the PR-1 API (fixed batch of identical requests) for
 the examples and the integration tests.
 """
@@ -40,10 +51,37 @@ import numpy as np
 import jax
 
 from repro.configs import get_config
+from repro.dist.api import make_serve_mesh
 from repro.models import convert_to_compressed, init_model
 from repro.serve import (ServeEngine, serve_fixed_batch, serve_sequential,
                          shared_prefix_trace, synthetic_trace)
 from repro.serve.cache import seed_decode_caches as _seed_caches  # compat
+
+
+def _parse_mesh(spec: str):
+    """'axis=size[,axis=size]' -> a Mesh over jax.devices() in that order.
+    Serving requires a 'model' axis (the TP/ring axis); extra axes are
+    allowed but the serve rules replicate over them."""
+    import numpy as np
+    from jax.sharding import Mesh
+    names, sizes = [], []
+    for part in spec.split(","):
+        name, _, size = part.partition("=")
+        if not size or not size.isdigit():
+            raise SystemExit(f"--mesh: bad entry {part!r} "
+                             f"(want axis=size, e.g. model=4)")
+        names.append(name.strip())
+        sizes.append(int(size))
+    if "model" not in names:
+        raise SystemExit("--mesh must include a 'model' axis (the serving "
+                         "TP axis)")
+    n = int(np.prod(sizes))
+    devs = jax.devices()
+    if n > len(devs):
+        raise SystemExit(f"--mesh needs {n} devices, have {len(devs)}; on "
+                         f"CPU set XLA_FLAGS="
+                         f"--xla_force_host_platform_device_count={n}")
+    return Mesh(np.array(devs[:n]).reshape(sizes), tuple(names))
 
 
 def _load(arch: str, smoke: bool, impl: str, seed: int = 0,
@@ -121,6 +159,31 @@ def main() -> None:
                          "system prompts in the generated trace (the trace "
                          "becomes shared-prefix: 3/4 of --prompt-len shared, "
                          "1/4 per-request suffix)")
+    ap.add_argument("--tp", type=int, default=0,
+                    help="tensor-parallel width: serve over the first N "
+                         "devices on a ('model',) mesh (0 = single-device; "
+                         "continuous scheduler only).  CPU CI: set XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=N first")
+    ap.add_argument("--mesh", default="",
+                    help="explicit mesh as 'axis=size[,axis=size]', e.g. "
+                         "'model=4'; must include a 'model' axis.  "
+                         "Overrides --tp")
+    ap.add_argument("--tp-collective", default="auto",
+                    choices=["auto", "ring", "gspmd"],
+                    help="TP forward-pass collective for compressed weights: "
+                         "'ring' streams the compressed N:M shards through "
+                         "collective_matmul_ag_sparse, 'gspmd' leaves layout "
+                         "to the partitioner, 'auto' = ring when compressed")
+    ap.add_argument("--distributed", action="store_true",
+                    help="call jax.distributed.initialize() before touching "
+                         "devices (multi-process serving; the mesh then "
+                         "spans the global device list)")
+    ap.add_argument("--coordinator", default=None,
+                    help="with --distributed: coordinator host:port")
+    ap.add_argument("--num-processes", type=int, default=None,
+                    help="with --distributed: total process count")
+    ap.add_argument("--process-id", type=int, default=None,
+                    help="with --distributed: this process's rank")
     args = ap.parse_args()
 
     if (args.prefix_cache or args.preempt != "replay") and (
@@ -128,6 +191,17 @@ def main() -> None:
         raise SystemExit("--prefix-cache/--preempt suspend require --kv paged "
                          "with --scheduler continuous (both operate on the "
                          "block pool)")
+    if (args.tp or args.mesh) and args.scheduler != "continuous":
+        raise SystemExit("--tp/--mesh require --scheduler continuous (the "
+                         "sequential oracle is single-device by design)")
+    if args.distributed:
+        # must run before any jax.devices()/computation: the coordinator
+        # handshake fixes the global device list
+        jax.distributed.initialize(coordinator_address=args.coordinator,
+                                   num_processes=args.num_processes,
+                                   process_id=args.process_id)
+    mesh = _parse_mesh(args.mesh) if args.mesh else (
+        make_serve_mesh(args.tp) if args.tp else None)
 
     # weights are born dense (srste semantics) so both --weights settings
     # serve literally the same model: 'compressed' packs it offline.
@@ -155,7 +229,8 @@ def main() -> None:
                           block_size=args.block_size,
                           n_blocks=args.blocks or None, attn=args.attn,
                           prefix_cache=args.prefix_cache,
-                          preempt=args.preempt)
+                          preempt=args.preempt, mesh=mesh,
+                          tp_collective=args.tp_collective)
         results = eng.run(reqs)
         st = eng.stats()
         print(f"continuous[{args.weights},{args.kv},{args.attn}]: "
@@ -164,6 +239,13 @@ def main() -> None:
               f"occupancy {st['occupancy']:.2f}, "
               f"weight stream {st['weight_stream_ratio']:.2f}x dense "
               f"({int(st['weight_stream_bytes'])} B/step)")
+        if mesh is not None:
+            print(f"tensor-parallel: tp={int(st['tp'])} over "
+                  f"{tuple(mesh.axis_names)} mesh, ring traffic "
+                  f"{st['ring_traffic_ratio']:.2f}x dense "
+                  f"({int(st['ring_bytes_per_step'])} B/step across "
+                  f"{int(st['ring_linears'])} ring linears, "
+                  f"{int(st['local_linears'])} local)")
         if args.kv == "paged":
             print(f"paged pool: {int(st['kv_bytes_peak'])} B KV peak of "
                   f"{int(st['kv_bytes_capacity'])} B capacity, "

@@ -4,4 +4,6 @@ CNN-as-GEMM — every matmul-bearing projection is a SparseLinear."""
 from repro.models.config import ArchConfig, param_count
 from repro.models.transformer import (convert_to_compressed, decode_step,
                                       forward, init_caches, init_model,
-                                      loss_fn, prefill, weight_stream_bytes)
+                                      loss_fn, param_shard_specs, prefill,
+                                      serve_ring_traffic_bytes,
+                                      weight_stream_bytes)

@@ -20,6 +20,7 @@ from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import layers as sparse_layers
 from repro.dist.api import constrain
@@ -725,6 +726,85 @@ def weight_stream_bytes(params, cfg: ArchConfig) -> Dict[str, float]:
 
     _walk_linears(params, acc)
     tot["ratio"] = tot["stream_bytes"] / max(tot["dense_bytes"], 1)
+    return tot
+
+
+# --------------------------------------------------- tensor-parallel serving
+
+# Leaf names that carry a linear's [..., out, in]-shaped tensors (or the
+# compressed [..., out, nnz] pair).  The spec walker is *structural* — keyed
+# on these names, not on init-time spec trees — because ``ServeEngine``
+# compresses params after init ('w' -> 'w_vals'/'w_idx'), which changes the
+# tree structure out from under any spec tree captured at init.
+_LINEAR_LEAF_KEYS = frozenset({"w", "w_vals", "w_idx", "mask"})
+
+
+def param_shard_specs(params):
+    """Logical shard specs for a (possibly compressed) serving param tree.
+
+    Output-feature axes get "tp" (axis -2 of every linear-like leaf, axis -1
+    of biases, axis 0 of the embedding table); contraction axes and all
+    leading stack axes (layers, experts) stay replicated.  Sharding only
+    output axes is what keeps TP decode equal to the single-device oracle:
+    no contraction is ever split, so per-element reduction order is
+    untouched.  Resolution through ``dist.api.logical_to_pspec`` then drops
+    "tp" from any dimension the mesh doesn't divide (e.g. the MoE router's
+    [E, d] weight via min_dim, odd vocab sizes), degrading to replication.
+    """
+    def walk(tree, name=""):
+        if isinstance(tree, dict):
+            return {k: walk(v, k) for k, v in tree.items()}
+        nd = getattr(tree, "ndim", 0)
+        if name == "emb" and nd == 2:
+            return ("tp", None)
+        if name in _LINEAR_LEAF_KEYS and nd >= 2:
+            return (None,) * (nd - 2) + ("tp", None)
+        if name == "b" and nd >= 1:
+            return (None,) * (nd - 1) + ("tp",)
+        return None
+    return walk(params)
+
+
+def serve_ring_traffic_bytes(params, cfg: ArchConfig, ndev: int
+                             ) -> Dict[str, float]:
+    """Modeled per-decode-step interconnect traffic for TP=ndev serving.
+
+    Each decode step streams every linear once; with the sparse ring
+    (``collective_matmul_ag_sparse``) a converted leaf's *compressed* shard
+    rotates — ``ring_bytes`` sums that over the tree, ``dense_ring_bytes``
+    is the same ring shipping decompressed weights (the dense-TP baseline).
+    Leaves whose output rows don't divide over the mesh run locally and add
+    nothing to either side (counted in ``local_linears``).
+    """
+    from repro.dist.collectives import ring_matmul_bytes
+    sp = cfg.sparsity
+    tot = {"ring_bytes": 0, "dense_ring_bytes": 0,
+           "ring_linears": 0, "local_linears": 0}
+
+    def acc(p):
+        leaf = p.get("w_vals", p.get("w"))
+        stack = int(np.prod(leaf.shape[:-2], dtype=np.int64)) \
+            if leaf.ndim > 2 else 1
+        o = leaf.shape[-2]
+        db = jnp.dtype(leaf.dtype).itemsize
+        if ndev <= 1 or o % ndev:
+            tot["local_linears"] += 1
+            return p
+        tot["ring_linears"] += 1
+        if "w_vals" in p:
+            k = leaf.shape[-1] * sp.m // sp.n
+            tot["ring_bytes"] += stack * ring_matmul_bytes(
+                o, k, ndev, sp.n, sp.m, dtype_bytes=db, sparse=True)
+        else:
+            k = leaf.shape[-1]
+            tot["ring_bytes"] += stack * ring_matmul_bytes(
+                o, k, ndev, dtype_bytes=db, sparse=False)
+        tot["dense_ring_bytes"] += stack * ring_matmul_bytes(
+            o, k, ndev, dtype_bytes=db, sparse=False)
+        return p
+
+    _walk_linears(params, acc)
+    tot["ratio"] = tot["ring_bytes"] / max(tot["dense_ring_bytes"], 1)
     return tot
 
 

@@ -57,6 +57,21 @@ cost scales with resident bytes instead of prompt length, and no emitted
 token is ever recomputed.  ``preempt="replay"`` keeps the PR-5 behavior and
 serves as the oracle (greedy decode makes replay deterministic).
 
+``mesh=`` (PR 8) turns on tensor-parallel serving: params and cache pools
+are laid out over a 1-D ("model",) device mesh under
+``dist.api.SERVE_TP_RULES`` — every linear's output-feature axis and the
+per-head cache axes shard, contraction axes / block tables / scalars
+replicate — and both jitted entry points trace inside the matching
+``axis_rules`` context so the model's ``constrain`` annotations resolve.
+Because only output axes are ever split, per-element reduction order is
+identical to the single-device engine, which therefore stays the
+token-equality oracle.  With ``compressed=True`` the decode-shaped linears
+additionally route through the explicit sparse ring
+(``dist.collectives.collective_matmul_ag_sparse`` via
+``sparsity.decode_ring``), so what crosses the interconnect per step is the
+*compressed* weight shard — the paper's Fig 12 traffic property at cluster
+scale; ``stats()`` reports the modeled ring bytes vs the dense-TP baseline.
+
 This is the decode regime the paper's compressed N:M format targets: every
 step is a small-batch matvec against the compressed weight stream
 (``kernels.nm_spmv``'s vindexmac dataflow), so keeping slots full converts
@@ -73,8 +88,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.dist.api import SERVE_TP_RULES, axis_rules, make_shardings
 from repro.models import (convert_to_compressed, decode_step, init_caches,
-                          prefill, weight_stream_bytes)
+                          param_shard_specs, prefill,
+                          serve_ring_traffic_bytes, weight_stream_bytes)
 from repro.serve.cache import scatter_slot, seed_decode_caches
 from repro.serve.paged import BlockPool, SwapState, _detect_layout, \
     default_buckets
@@ -121,9 +138,17 @@ class ServeEngine:
                  block_size: int = 4, n_blocks: Optional[int] = None,
                  prefill_buckets: Optional[Sequence[int]] = None,
                  attn: str = "gather", prefix_cache: bool = False,
-                 preempt: str = "replay", debug_invariants: bool = False):
+                 preempt: str = "replay", debug_invariants: bool = False,
+                 mesh=None, tp_collective: str = "auto"):
         if kv not in ("slotted", "paged"):
             raise ValueError(f"kv must be 'slotted' or 'paged', got {kv!r}")
+        if tp_collective not in ("auto", "ring", "gspmd"):
+            raise ValueError(f"tp_collective must be 'auto', 'ring' or "
+                             f"'gspmd', got {tp_collective!r}")
+        if mesh is not None and "model" not in mesh.shape:
+            raise ValueError(f"serving mesh needs a 'model' axis, got "
+                             f"{tuple(mesh.axis_names)} (see "
+                             f"dist.api.make_serve_mesh)")
         if attn not in ("gather", "fused"):
             raise ValueError(f"attn must be 'gather' or 'fused', got {attn!r}")
         if attn == "fused" and kv != "paged":
@@ -144,6 +169,25 @@ class ServeEngine:
             params = convert_to_compressed(params, cfg)
             cfg = cfg.replace(sparsity=dataclasses.replace(
                 cfg.sparsity, mode="compressed"))
+        self.mesh = mesh
+        self.rules = None
+        self.ring_traffic = None
+        if mesh is not None:
+            self.rules = dict(SERVE_TP_RULES)
+            # 'auto': compressed serving rides the explicit sparse ring so
+            # only compressed bytes cross the interconnect; dense serving
+            # leaves layout to GSPMD (there is nothing compressed to ship).
+            if compressed and tp_collective in ("auto", "ring"):
+                cfg = cfg.replace(sparsity=dataclasses.replace(
+                    cfg.sparsity, decode_ring=True))
+            # shard AFTER conversion: the spec walker is structural (keyed on
+            # leaf names), so it sees the compressed 'w_vals'/'w_idx' leaves
+            # the init-time spec tree knows nothing about
+            params = jax.device_put(params, make_shardings(
+                param_shard_specs(params), mesh, self.rules,
+                shapes_tree=params))
+            self.ring_traffic = serve_ring_traffic_bytes(
+                params, cfg, int(mesh.shape["model"]))
         self.compressed = compressed
         self.weight_stream = weight_stream_bytes(params, cfg)
         self.params = params
@@ -173,7 +217,8 @@ class ServeEngine:
         self._slots: Dict[int, _SlotState] = {}
         self._suspended: Dict[int, _Suspended] = {}   # rid -> host state
         if kv == "paged":
-            self.pool = BlockPool(cfg, n_slots, max_len, block_size, n_blocks)
+            self.pool = BlockPool(cfg, n_slots, max_len, block_size, n_blocks,
+                                  mesh=mesh, rules=self.rules)
             self.caches = None
             # prefix sharing needs every cache leaf addressable through the
             # block table: a family with slot-indexed state (SSM, conv tails,
@@ -186,26 +231,42 @@ class ServeEngine:
             self.prefill_buckets = tuple(sorted(set(
                 prefill_buckets if prefill_buckets is not None
                 else default_buckets(max_len))))
-            self._decode = jax.jit(
+            self._decode = self._sharded_jit(
                 lambda p, c, t, pos, tbl: decode_step(p, cfg, c, t, pos, tbl,
                                                       attn_impl=attn))
-            self._prefill = jax.jit(
+            self._prefill = self._sharded_jit(
                 lambda p, b, lp: prefill(p, cfg, b, logit_pos=lp))
         else:
             self.pool = None
             self.index = None
             self._all_paged = False
             self.prefill_buckets = ()
-            self.caches, _ = init_caches(cfg, n_slots, max_len)
+            self.caches, cache_specs = init_caches(cfg, n_slots, max_len)
+            if mesh is not None:
+                self.caches = jax.device_put(self.caches, make_shardings(
+                    cache_specs, mesh, self.rules, shapes_tree=self.caches))
             # sequence-axis detection (same structural probe the paged pool
             # uses) so stats() can split true KV bytes from slot-indexed
             # state instead of lumping every leaf into "resident KV"
-            _, _, self._slotted_seq_axes = _detect_layout(cfg, n_slots)
+            _, _, self._slotted_seq_axes, _ = _detect_layout(cfg, n_slots)
             # one jit each: decode re-uses a single (pool-shaped) executable;
             # prefill compiles per distinct prompt length (paged buckets).
-            self._decode = jax.jit(
+            self._decode = self._sharded_jit(
                 lambda p, c, t, pos: decode_step(p, cfg, c, t, pos))
-            self._prefill = jax.jit(lambda p, b: prefill(p, cfg, b))
+            self._prefill = self._sharded_jit(lambda p, b: prefill(p, cfg, b))
+
+    def _sharded_jit(self, fn):
+        """jit ``fn``; over a mesh, every call (hence the trace) runs inside
+        the engine's ``axis_rules`` context so the model's ``constrain``
+        annotations — and the compressed ring's mesh lookup — resolve."""
+        jf = jax.jit(fn)
+        if self.mesh is None:
+            return jf
+
+        def call(*args):
+            with axis_rules(self.mesh, self.rules):
+                return jf(*args)
+        return call
 
     # --------------------------------------------------------------- frontend
 
@@ -604,7 +665,19 @@ class ServeEngine:
                # each linear once; see models.weight_stream_bytes)
                "weight_stream_bytes": float(ws["stream_bytes"]),
                "dense_weight_bytes": float(ws["dense_bytes"]),
-               "weight_stream_ratio": float(ws["ratio"])}
+               "weight_stream_ratio": float(ws["ratio"]),
+               "tp": float(self.mesh.shape["model"]) if self.mesh else 1.0}
+        if self.ring_traffic is not None:
+            rt = self.ring_traffic
+            # modeled per-decode-step interconnect traffic (see
+            # models.serve_ring_traffic_bytes): what the ring ships
+            # compressed vs the same ring shipping dense weights
+            out.update({
+                "ring_bytes_per_step": float(rt["ring_bytes"]),
+                "ring_dense_bytes_per_step": float(rt["dense_ring_bytes"]),
+                "ring_traffic_ratio": float(rt["ratio"]),
+                "ring_linears": float(rt["ring_linears"]),
+                "local_linears": float(rt["local_linears"])})
         if self.kv == "paged":
             out.update({
                 "preemptions": float(self.preemptions),

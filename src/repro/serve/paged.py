@@ -39,7 +39,27 @@ Invariants (property-tested in tests/test_paged.py + tests/test_prefix.py):
     (the free list is a min-heap: same assignment order as the historical
     sorted-list implementation without the O(n log n) re-sort per release);
   * COW never mutates a block with refcount > 1 (the copy happens first);
+  * **write-exclusivity**: the block backing an active slot's *next decode
+    write* always has refcount 1 when the write lands — a prefix hit that
+    ends mid-block shares the boundary block too, so the engine must run
+    ``cow`` on it before the slot's first decode step (checked by
+    ``check_invariants(active_pos=...)``);
+  * **boundary-block resolution**: when a prefix match crosses a radix-node
+    boundary inside one block span (two retired branches straddle the same
+    block), the pid recorded at the span's *last* matched position is the
+    one that holds the full matched history (the later branch's COW copy);
+    sharing any earlier pid of the span would resurrect the older branch's
+    divergent suffix — see ``serve/prefix.py``;
   * ``swap_out`` -> ``swap_in`` round-trips every leaf bit-exact.
+
+Tensor-parallel serving (PR 8): constructed with ``mesh=``, the pool's
+device leaves are laid out under ``dist.api.SERVE_TP_RULES`` — the block and
+block_size axes of paged leaves are **replicated** (the host-side int32
+block table addresses physical blocks, so every device must resolve any
+block id locally; sharding the block axis would turn each table walk into a
+cross-device gather), while head/feature axes keep their logical names and
+shard over "model".  The table itself stays host numpy, replicated to every
+device at each decode step exactly as in the single-device engine.
 """
 
 from __future__ import annotations
@@ -72,14 +92,17 @@ def default_buckets(max_len: int, lo: int = 4) -> Tuple[int, ...]:
 def _detect_layout(cfg, n_slots: int):
     """Probe init_caches at two lengths; a leaf whose shape changes has a
     sequence axis (the changed axis) and is paged.  Returns (treedef,
-    probe_leaves, seq_axes) with seq_axes[i] = None for slot-indexed leaves.
-    Slot-indexed leaves are max_len-independent by construction (SSM state,
-    conv tails, encoder cross K/V), so the probe leaves themselves serve as
-    their zero templates."""
-    c1, _ = init_caches(cfg, n_slots, 1)
+    probe_leaves, seq_axes, spec_leaves) with seq_axes[i] = None for
+    slot-indexed leaves; spec_leaves are the per-leaf logical shard specs
+    from ``init_caches`` (slotted layout, same flatten order).  Slot-indexed
+    leaves are max_len-independent by construction (SSM state, conv tails,
+    encoder cross K/V), so the probe leaves themselves serve as their zero
+    templates."""
+    c1, s1 = init_caches(cfg, n_slots, 1)
     c2, _ = init_caches(cfg, n_slots, 2)
     l1, treedef = jax.tree_util.tree_flatten(c1)
     l2, _ = jax.tree_util.tree_flatten(c2)
+    specs = treedef.flatten_up_to(s1)
     axes: List[Optional[int]] = []
     for a, b in zip(l1, l2):
         if a.shape == b.shape:
@@ -91,7 +114,20 @@ def _detect_layout(cfg, n_slots: int):
                 f"paged layout detection: cache leaf changed in more than "
                 f"one axis between probe lengths ({a.shape} vs {b.shape})")
         axes.append(diff[0])
-    return treedef, l1, axes
+    return treedef, l1, axes, specs
+
+
+def _paged_spec(spec, ax):
+    """Shard spec of a paged leaf, from the slotted leaf's spec: the batch
+    axis (ax-1) and sequence axis (ax) collapse into (n_blocks, block_size),
+    both replicated — blocks are addressed by host-side tables and must be
+    resolvable on every device — while lead/tail entries (heads, features)
+    keep their logical names, so the head axis of a paged K/V pool still
+    shards over "model" under the serving rules."""
+    if spec is None or ax is None:
+        return spec
+    spec = tuple(spec)
+    return spec[:ax - 1] + (None, None) + spec[ax + 1:]
 
 
 def _detect_slot_axes(cfg, n_slots: int):
@@ -142,7 +178,7 @@ class BlockPool:
     """
 
     def __init__(self, cfg, n_slots: int, max_len: int, block_size: int,
-                 n_blocks: Optional[int] = None):
+                 n_blocks: Optional[int] = None, mesh=None, rules=None):
         if block_size <= 0:
             raise ValueError(f"need block_size > 0, got {block_size}")
         if n_slots <= 0:
@@ -158,7 +194,8 @@ class BlockPool:
         if self.n_blocks < 2:
             raise ValueError("need at least 2 blocks (one is reserved trash)")
 
-        self._treedef, probe, self._seq_axes = _detect_layout(cfg, n_slots)
+        self._treedef, probe, self._seq_axes, spec_leaves = \
+            _detect_layout(cfg, n_slots)
         leaves = []
         for leaf, ax in zip(probe, self._seq_axes):
             if ax is None:
@@ -168,6 +205,22 @@ class BlockPool:
                 leaves.append(jnp.zeros(
                     lead + (self.n_blocks, block_size) + tail, leaf.dtype))
         self.caches = jax.tree_util.tree_unflatten(self._treedef, leaves)
+
+        # logical shard specs of the pool leaves (paged leaves: block axes
+        # replicated, head/feature axes keep their names) — resolved to
+        # NamedShardings only when serving over a mesh
+        self.cache_specs = jax.tree_util.tree_unflatten(
+            self._treedef,
+            [_paged_spec(s, ax)
+             for s, ax in zip(spec_leaves, self._seq_axes)])
+        self.mesh = mesh
+        if mesh is not None:
+            from repro.dist.api import SERVE_TP_RULES, make_shardings
+            shardings = make_shardings(self.cache_specs, mesh,
+                                       rules if rules is not None
+                                       else SERVE_TP_RULES,
+                                       shapes_tree=self.caches)
+            self.caches = jax.device_put(self.caches, shardings)
 
         self._staging = None                 # built lazily on first seed
         self._slot_axes = _detect_slot_axes(cfg, n_slots)

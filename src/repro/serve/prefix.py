@@ -19,13 +19,28 @@ token-by-token and may stop mid-edge, so hits are **token-granular**: a
 prefix that ends inside a block shares that block partially, and the first
 divergent write triggers copy-on-write in the pool.
 
-Refcounting contract: **a node holds one pool reference per distinct block
-id on its edge** (taken at node creation, dropped at eviction).  A block
-spanning a node split ends up referenced by both halves — refcounts make
-that safe, and it keeps the bookkeeping local: no node ever needs to know
-what the rest of the trie pins.  Eviction removes the least-recently-used
-*leaf* node (``evict_lru``) so interior nodes — the shared short prefixes —
-outlive their rarely-reused extensions.
+Refcounting contract (established by the PR-7 review): **a node holds one
+pool reference per distinct block id on its edge** (taken at node creation,
+dropped at eviction).  A block spanning a node split ends up referenced by
+both halves — refcounts make that safe, and it keeps the bookkeeping local:
+no node ever needs to know what the rest of the trie pins.  Eviction removes
+the least-recently-used *leaf* node (``evict_lru``) so interior nodes — the
+shared short prefixes — outlive their rarely-reused extensions; the eviction
+loop must be handed the node it is making room for (``protect=``), since
+ancestors of a live node can never become leaves but the match node itself
+could.
+
+Boundary-block rule (also from the PR-7 review): when a match crosses a
+radix-node boundary *inside* one block-size span — prompt ``X+A`` retired,
+then ``X+B`` with ``len(X) % block_size != 0`` — the span's per-token pids
+straddle two branches that name *different physical copies* of the same
+logical block (the later branch copy-on-wrote it before diverging).  The
+engine must share the pid recorded at the span's **last matched position**:
+that is the later branch's COW copy holding the full matched history, while
+the earlier positions' pid holds the older branch's divergent suffix past
+the boundary.  A hit ending mid-block then still lands the new slot's first
+decode write in a shared block, so ``BlockPool.cow`` runs before that write
+(the pool's write-exclusivity invariant — see ``serve/paged.py``).
 """
 
 from __future__ import annotations

@@ -1,0 +1,70 @@
+#!/usr/bin/env python
+"""Fail on dead relative links in the repo's markdown docs.
+
+Scans README.md and docs/*.md for markdown links/images and checks that
+every *relative* target resolves to an existing file or directory (relative
+to the file containing the link).  External links (http/https/mailto) and
+pure in-page anchors (#...) are skipped; a ``path#anchor`` target is checked
+for the path only.  Run from anywhere:
+
+    python tools/check_docs_links.py [files...]
+
+With no arguments it checks README.md plus every .md under docs/.  Exits 1
+listing every dead link, 0 when clean (the CI docs-link step).
+"""
+
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+# [text](target) and ![alt](target); target stops at the first unescaped ')'
+_LINK = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+_SKIP = ("http://", "https://", "mailto:", "#")
+
+
+def dead_links(path: Path):
+    root = path.parent
+    out = []
+    in_code = False
+    for ln, line in enumerate(path.read_text().splitlines(), 1):
+        if line.lstrip().startswith("```"):
+            in_code = not in_code
+        if in_code:
+            continue
+        for m in _LINK.finditer(line):
+            target = m.group(1)
+            if target.startswith(_SKIP):
+                continue
+            rel = target.split("#", 1)[0]
+            if not rel:
+                continue
+            if not (root / rel).exists():
+                out.append((ln, target))
+    return out
+
+
+def main(argv) -> int:
+    repo = Path(__file__).resolve().parent.parent
+    files = ([Path(a) for a in argv] if argv else
+             [repo / "README.md", *sorted((repo / "docs").glob("*.md"))])
+    bad = 0
+    for f in files:
+        if not f.exists():
+            print(f"missing file: {f}")
+            bad += 1
+            continue
+        for ln, target in dead_links(f):
+            print(f"{f.relative_to(repo) if f.is_relative_to(repo) else f}:"
+                  f"{ln}: dead link -> {target}")
+            bad += 1
+    if bad:
+        print(f"{bad} dead link(s)")
+        return 1
+    print(f"checked {len(files)} file(s): all relative links resolve")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv[1:]))
