@@ -1,0 +1,175 @@
+"""Self-speculative decoding vs the non-speculative paged engine.
+
+Same weights, same trace, two engines: the baseline paged ``ServeEngine``
+decodes one token per target pass; the speculative engine derives a cheap
+draft *view* of the same compressed pool (``models.make_draft`` — zero extra
+weight storage), proposes ``k`` tokens per slot through the ``nm_spmv``
+decode path, and verifies all of them in one batched target forward.  Greedy
+acceptance keeps the emitted tokens **bitwise identical** to the baseline,
+so the whole speedup is accounting: strictly fewer target decode passes for
+the same token stream, with the acceptance rate saying how much of the
+draft's cheap work the target kept.
+
+Per-family draft kinds (measured on these random-weight smoke configs):
+``gemma2-9b`` re-ranks the 2:4 pool to top-1-of-4 (``rerank``);
+``llama3.2-1b`` and ``deepseek-v2-lite-16b`` (MLA + MoE) stride over every
+other layer (``skip``) — rerank agreement is family-dependent, skip-layer is
+the robust default.  ``n_slots=2, k=3`` keeps the MoE verify batch
+(``B * (k+1) = 8``) within the expert-capacity floor so routing never drops
+tokens and the oracle comparison stays exact.
+
+Exits non-zero on token mismatch or on the speculative engine failing to
+save target decode steps; the CI ``bench-trajectory`` job runs ``--smoke``
+and uploads ``BENCH_8.json``.
+
+Standalone:  PYTHONPATH=src python benchmarks/serve_spec.py [--smoke]
+Also exposes ``run(quick)`` rows for the benchmarks.run CSV harness.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+from typing import Dict, List
+
+import jax
+import numpy as np
+
+try:
+    from benchmarks.common import Row, write_bench
+except ModuleNotFoundError:            # invoked as a script from anywhere
+    import os
+    import sys
+    sys.path.insert(0, os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))))
+    from benchmarks.common import Row, write_bench
+
+# arch -> draft kind that accepts well on that family's smoke config
+ARCHS = {"llama3.2-1b": "skip",
+         "gemma2-9b": "rerank",
+         "deepseek-v2-lite-16b": "skip"}
+
+
+def bench_arch(arch: str, draft: str, n_requests: int = 4, k: int = 3,
+               n_slots: int = 2, block_size: int = 4) -> Dict:
+    from repro.configs import get_config
+    from repro.models import init_model
+    from repro.serve import ServeEngine, SpecConfig, synthetic_request
+
+    cfg = get_config(arch, smoke=True)
+    cfg = cfg.replace(sparsity=dataclasses.replace(
+        cfg.sparsity, mode="compressed", impl="xla"))
+    params, _ = init_model(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(7)
+    plens = [6, 11, 4, 7, 5, 9]
+    gens = [8, 6, 9, 7, 8, 6]
+    reqs = [synthetic_request(cfg, rng, rid=i, prompt_len=plens[i % 6],
+                              max_new_tokens=gens[i % 6])
+            for i in range(n_requests)]
+    kw = dict(n_slots=n_slots, max_len=24, kv="paged",
+              block_size=block_size)
+
+    t0 = time.time()
+    base_eng = ServeEngine(params, cfg, **kw)
+    base = base_eng.run([dataclasses.replace(r) for r in reqs])
+    t_base = time.time() - t0
+
+    t0 = time.time()
+    spec_eng = ServeEngine(params, cfg, **kw,
+                           spec=SpecConfig(k=k, draft=draft),
+                           debug_invariants=True)
+    spec = spec_eng.run([dataclasses.replace(r) for r in reqs])
+    t_spec = time.time() - t0
+    spec_eng.pool.check_invariants(active_pos={})
+
+    bs, ss = base_eng.stats(), spec_eng.stats()
+    out = {
+        "arch": arch, "draft": draft, "k": k, "n_requests": n_requests,
+        "n_slots": n_slots, "block_size": block_size,
+        "tokens": int(ss["tokens"]),
+        "base_decode_steps": int(bs["decode_steps"]),
+        "spec_decode_steps": int(ss["decode_steps"]),
+        "draft_steps": int(ss["draft_steps"]),
+        "spec_proposed": int(ss["spec_proposed"]),
+        "spec_accepted": int(ss["spec_accepted"]),
+        "acceptance": round(ss["spec_acceptance"], 4),
+        "steps_saved": int(ss["spec_steps_saved"]),
+        # modeled weight-stream bytes: the draft view's per-step read share
+        # relative to the target's (shared storage, no extra resident bytes)
+        "target_stream_bytes": int(ss["weight_stream_bytes"]),
+        "draft_stream_bytes": int(ss["draft_stream_bytes"]),
+        "draft_stream_share": round(ss["draft_stream_bytes"]
+                                    / ss["weight_stream_bytes"], 4),
+        "base_seconds": round(t_base, 4),
+        "spec_seconds": round(t_spec, 4),
+    }
+    out["token_match"] = all(
+        np.array_equal(base[r.rid].tokens, spec[r.rid].tokens) for r in reqs)
+    # the tentpole claims, as checkable facts: identical tokens from
+    # strictly fewer target passes, with real draft work accepted
+    out["steps_ok"] = (out["spec_decode_steps"] < out["base_decode_steps"]
+                       and out["steps_saved"] > 0)
+    out["ok"] = bool(out["token_match"] and out["steps_ok"])
+    return out
+
+
+def bench(archs: List[str], **kw) -> Dict:
+    report = {"bench": "serve_spec", "archs": {}, "ok": True}
+    for arch in archs:
+        res = bench_arch(arch, ARCHS[arch], **kw)
+        report["archs"][arch] = res
+        report["ok"] &= res["ok"]
+    return report
+
+
+def run(quick: bool = True) -> List[Row]:
+    rows: List[Row] = []
+    rep = bench(["llama3.2-1b"] if quick else list(ARCHS))
+    for arch, r in rep["archs"].items():
+        rows.append((
+            f"serve_spec_{arch.split('-')[0]}",
+            r["spec_seconds"] * 1e6,
+            f"steps{r['spec_decode_steps']}vs{r['base_decode_steps']}|"
+            f"acc{r['acceptance']:.2f}|saved{r['steps_saved']}|"
+            f"match{int(r['token_match'])}"))
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--archs", default=",".join(ARCHS),
+                    help="comma list from {%s}" % ",".join(ARCHS))
+    ap.add_argument("--requests", type=int, default=4)
+    ap.add_argument("--k", type=int, default=3)
+    ap.add_argument("--slots", type=int, default=2)
+    ap.add_argument("--block-size", type=int, default=4)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny CI iteration (llama only)")
+    ap.add_argument("--out", default="BENCH_8.json")
+    args = ap.parse_args()
+
+    archs = (["llama3.2-1b"] if args.smoke
+             else [a.strip() for a in args.archs.split(",") if a.strip()])
+    for a in archs:
+        if a not in ARCHS:
+            raise SystemExit(f"unknown arch {a!r}; known: {list(ARCHS)}")
+    report = bench(archs, n_requests=args.requests, k=args.k,
+                   n_slots=args.slots, block_size=args.block_size)
+
+    for arch, r in report["archs"].items():
+        print(f"{arch} [{r['draft']}]: {r['spec_decode_steps']} target steps "
+              f"vs {r['base_decode_steps']} baseline for {r['tokens']} "
+              f"tokens ({r['steps_saved']} saved, acceptance "
+              f"{r['acceptance']:.2f} over {r['spec_proposed']} proposed, "
+              f"draft stream {r['draft_stream_share']:.2f}x target) | "
+              f"tokens {'MATCH' if r['token_match'] else 'MISMATCH'}")
+
+    write_bench(report, args.out)
+    if not report["ok"]:
+        raise SystemExit("speculative serving failed an invariant (token "
+                         "mismatch or no target steps saved)")
+
+
+if __name__ == "__main__":
+    main()

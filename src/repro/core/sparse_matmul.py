@@ -122,6 +122,41 @@ def _xwt_xla_gather(x, values, indices, n, m):
     return y.astype(x.dtype)
 
 
+def nm_rerank(values: jax.Array, indices: jax.Array, n: int, m: int,
+              keep: int = 1) -> Tuple[jax.Array, jax.Array]:
+    """Re-rank an n:m compressed tensor down to keep:m (the sparsity ladder).
+
+    Within each m-block the n stored entries are re-ranked by magnitude and
+    only the ``keep`` largest survive — exactly the offline ``compress`` rule
+    applied to the *already-compressed* operands, so the result is a valid
+    keep:m pair (in-block column order preserved) without ever touching the
+    dense weight.  This is the draft-view constructor of self-speculative
+    decoding: the same weight pool read at a cheaper fidelity through the
+    same nm_spmv index stream, at keep/n the values+index bytes.
+
+    values [..., rows, nnz], indices int [..., rows, nnz] (block-major, as
+    produced by ``sparsity.compress``) -> the same layout with
+    nnz' = nnz // n * keep."""
+    if not 0 < keep < n:
+        raise ValueError(f"need 0 < keep < n, got keep={keep} n={n}")
+    nnz = values.shape[-1]
+    if nnz % n:
+        raise ValueError(f"nnz {nnz} not divisible by n={n}")
+    g = nnz // n
+    v = values.reshape(values.shape[:-1] + (g, n))
+    i = indices.reshape(indices.shape[:-1] + (g, n))
+    # top-|keep| per block; ties resolve to the lowest slot (deterministic)
+    _, sel = jax.lax.top_k(jnp.abs(v.astype(jnp.float32)), keep)
+    vs = jnp.take_along_axis(v, sel, axis=-1)
+    ix = jnp.take_along_axis(i, sel, axis=-1)
+    # restore ascending in-block column order (the compress invariant)
+    order = jnp.argsort(ix, axis=-1)
+    vs = jnp.take_along_axis(vs, order, axis=-1)
+    ix = jnp.take_along_axis(ix, order, axis=-1)
+    out = values.shape[:-1] + (g * keep,)
+    return vs.reshape(out), ix.reshape(out)
+
+
 def default_impl(x_shape: Tuple[int, ...]) -> Impl:
     backend = jax.default_backend()
     if backend == "tpu":

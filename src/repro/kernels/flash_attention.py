@@ -335,6 +335,46 @@ def paged_mla_decode(q_lat: jax.Array, q_pe: jax.Array, ckv_pool: jax.Array,
     )(block_table, kv_len, q_lat, q_pe, ckv_pool, kpe_pool)
 
 
+def paged_gqa_verify(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
+                     block_table: jax.Array, kv_len: jax.Array, *,
+                     scale: Optional[float] = None,
+                     window: Optional[int] = None,
+                     cap: Optional[float] = None,
+                     interpret: bool = False) -> jax.Array:
+    """Fused paged GQA over a span of S queries per slot: q [B, S, KVH, G, d]
+    at consecutive positions, kv_len int32 [B] valid positions for the FIRST
+    query (its own token included) -> [B, S, KVH, G, dv] float32.
+
+    The speculative verify step scores k+1 positions against the pool after
+    the span's K/V have been written.  Query offset i sees exactly
+    ``kv_len + i`` positions (causal within the span), so each offset is one
+    ``paged_gqa_decode`` launch over the same table — the single-query kernel
+    is reused verbatim, which keeps offset 0 of a 1-query span bitwise equal
+    to the plain decode step."""
+    s = q.shape[1]
+    outs = [paged_gqa_decode(q[:, i], k_pool, v_pool, block_table,
+                             kv_len + i, scale=scale, window=window, cap=cap,
+                             interpret=interpret)
+            for i in range(s)]
+    return jnp.stack(outs, axis=1)
+
+
+def paged_mla_verify(q_lat: jax.Array, q_pe: jax.Array, ckv_pool: jax.Array,
+                     kpe_pool: jax.Array, block_table: jax.Array,
+                     kv_len: jax.Array, *, scale: float,
+                     interpret: bool = False) -> jax.Array:
+    """Fused paged MLA (absorbed) over a span of S queries per slot:
+    q_lat [B, S, H, r], q_pe [B, S, H, rd], kv_len int32 [B] valid positions
+    for the first query -> latent context [B, S, H, r] float32.  Query offset
+    i attends to ``kv_len + i`` positions; see ``paged_gqa_verify``."""
+    s = q_lat.shape[1]
+    outs = [paged_mla_decode(q_lat[:, i], q_pe[:, i], ckv_pool, kpe_pool,
+                             block_table, kv_len + i, scale=scale,
+                             interpret=interpret)
+            for i in range(s)]
+    return jnp.stack(outs, axis=1)
+
+
 def paged_decode_traffic(b: int, table_width: int, block_size: int,
                          kv_lens, d: int, dv: int, *,
                          dtype_bytes: int = 2) -> dict:

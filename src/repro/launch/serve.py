@@ -53,7 +53,8 @@ import jax
 from repro.configs import get_config
 from repro.dist.api import make_serve_mesh
 from repro.models import convert_to_compressed, init_model
-from repro.serve import (ServeEngine, serve_fixed_batch, serve_sequential,
+from repro.serve import (ServeEngine, SpecConfig, serve_fixed_batch,
+                         serve_sequential,
                          shared_prefix_trace, synthetic_trace)
 from repro.serve.cache import seed_decode_caches as _seed_caches  # compat
 
@@ -154,6 +155,22 @@ def main() -> None:
                          "victim and replays it from prefill; 'suspend' swaps "
                          "its KV blocks + slot state to host numpy and "
                          "resumes bit-exact on readmission")
+    ap.add_argument("--spec", action="store_true",
+                    help="self-speculative decoding (paged + continuous "
+                         "only): a cheap draft view of the serving pool "
+                         "proposes --spec-k tokens per slot per tick, the "
+                         "target verifies all of them in one batched "
+                         "forward, and greedy acceptance keeps the emitted "
+                         "tokens bitwise identical to the non-speculative "
+                         "engine")
+    ap.add_argument("--spec-k", type=int, default=3,
+                    help="with --spec: draft tokens proposed per verify")
+    ap.add_argument("--draft", default="rerank",
+                    choices=["rerank", "skip"],
+                    help="with --spec: draft view — 'rerank' re-ranks the "
+                         "compressed N:M pool to its top-1-of-m values "
+                         "(needs --weights compressed), 'skip' strides over "
+                         "every other layer stack")
     ap.add_argument("--prefix-mix", type=int, default=1,
                     help="with --prefix-cache: number of distinct shared "
                          "system prompts in the generated trace (the trace "
@@ -194,6 +211,16 @@ def main() -> None:
     if (args.tp or args.mesh) and args.scheduler != "continuous":
         raise SystemExit("--tp/--mesh require --scheduler continuous (the "
                          "sequential oracle is single-device by design)")
+    if args.spec:
+        if args.kv != "paged" or args.scheduler != "continuous":
+            raise SystemExit("--spec requires --kv paged with --scheduler "
+                             "continuous (speculative rollback rewinds the "
+                             "block table)")
+        if args.tp or args.mesh:
+            raise SystemExit("--spec does not support --tp/--mesh yet")
+        if args.draft == "rerank" and args.weights != "compressed":
+            raise SystemExit("--draft rerank re-ranks the compressed pool: "
+                             "use --weights compressed (or --draft skip)")
     if args.distributed:
         # must run before any jax.devices()/computation: the coordinator
         # handshake fixes the global device list
@@ -230,7 +257,9 @@ def main() -> None:
                           n_blocks=args.blocks or None, attn=args.attn,
                           prefix_cache=args.prefix_cache,
                           preempt=args.preempt, mesh=mesh,
-                          tp_collective=args.tp_collective)
+                          tp_collective=args.tp_collective,
+                          spec=(SpecConfig(k=args.spec_k, draft=args.draft)
+                                if args.spec else None))
         results = eng.run(reqs)
         st = eng.stats()
         print(f"continuous[{args.weights},{args.kv},{args.attn}]: "
@@ -258,6 +287,15 @@ def main() -> None:
                   f"{int(st['prefix_hit_tokens'])} cached tokens reused, "
                   f"{int(st['cow_copies'])} COW copies, "
                   f"{int(st['index_blocks'])} blocks resident in index")
+        if args.spec:
+            print(f"speculative[{args.draft},k={args.spec_k}]: "
+                  f"acceptance {st['spec_acceptance']:.2f} "
+                  f"({int(st['spec_accepted'])}/{int(st['spec_proposed'])} "
+                  f"drafts), {int(st['spec_steps_saved'])} target steps "
+                  f"saved over {int(st['draft_steps'])} draft steps, "
+                  f"draft stream "
+                  f"{st['draft_stream_bytes'] / st['weight_stream_bytes']:.2f}x "
+                  f"target")
     else:
         if args.kv == "paged":
             raise SystemExit("--kv paged requires --scheduler continuous "

@@ -4,6 +4,6 @@ CNN-as-GEMM — every matmul-bearing projection is a SparseLinear."""
 from repro.models.config import ArchConfig, param_count
 from repro.models.transformer import (convert_to_compressed, decode_step,
                                       forward, init_caches, init_model,
-                                      loss_fn, param_shard_specs, prefill,
-                                      serve_ring_traffic_bytes,
-                                      weight_stream_bytes)
+                                      loss_fn, make_draft, param_shard_specs,
+                                      prefill, serve_ring_traffic_bytes,
+                                      verify_step, weight_stream_bytes)

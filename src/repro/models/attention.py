@@ -19,7 +19,8 @@ import jax.numpy as jnp
 
 from repro.core.sparse_matmul import dense_forward_view, _decompress_xla
 from repro.dist.api import constrain
-from repro.kernels.flash_attention import paged_gqa_decode, paged_mla_decode
+from repro.kernels.flash_attention import (paged_gqa_decode, paged_gqa_verify,
+                                           paged_mla_decode, paged_mla_verify)
 from repro.models.common import (Params, apply_rope, rope_angles, softcap,
                                  sp_linear_apply, sp_linear_init)
 from repro.models.config import ArchConfig
@@ -180,6 +181,37 @@ def _paged_update(cache, updates, block_table, cache_pos):
     return new, reads, length
 
 
+def _paged_write_span(cache, updates, block_table, cache_pos):
+    """Write a span of S consecutive tokens per batch row through the block
+    table (the speculative verify path: all k+1 positions land in one call).
+
+    ``updates`` maps leaf name to ``[B, S, ...]``; row r's token at offset i
+    goes to logical position ``cache_pos[r] + i``, resolved through the same
+    table indirection as ``_paged_write``.  The engine must have backed and
+    COW'd every block the span touches before the call (write-exclusivity is
+    per-span here, checked by ``check_invariants(active_pos=...)``)."""
+    bsz = next(iter(cache.values())).shape[1]
+    posv = jnp.reshape(cache_pos, (-1,))
+    span = next(iter(updates.values())).shape[1]
+    posm = posv[:, None] + jnp.arange(span)              # [B, S]
+    bidx = jnp.arange(posv.shape[0])[:, None]
+    blk = block_table[bidx, posm // bsz]
+    off = posm % bsz
+    return {name: cache[name].at[blk, off].set(val.astype(cache[name].dtype))
+            for name, val in updates.items()}
+
+
+def _paged_update_span(cache, updates, block_table, cache_pos):
+    """``_paged_write_span`` + gather, the span analog of ``_paged_update``."""
+    bsz = next(iter(cache.values())).shape[1]
+    b = jnp.reshape(cache_pos, (-1,)).shape[0]
+    length = block_table.shape[1] * bsz
+    new = _paged_write_span(cache, updates, block_table, cache_pos)
+    reads = {name: c[block_table].reshape((b, length) + c.shape[2:])
+             for name, c in new.items()}
+    return new, reads, length
+
+
 def _paged_kv_len(cache_pos) -> jax.Array:
     """Valid positions per slot, the just-written token included."""
     return jnp.reshape(cache_pos, (-1,)).astype(jnp.int32) + 1
@@ -209,7 +241,9 @@ def gqa_apply(p: Params, x: jax.Array, cfg: ArchConfig, *,
     h, kv, hd = cfg.n_heads, cfg.n_kv, cfg.hd()
     sp = cfg.sparsity
     if jnp.ndim(positions) == 1:
-        positions = positions[:, None]      # per-slot decode: [B] -> [B, 1]
+        # per-slot decode: [B] -> [B, S] consecutive positions (S == 1 for
+        # the plain decode step; S == k+1 for the speculative verify span)
+        positions = positions[:, None] + jnp.arange(s)
 
     q = sp_linear_apply(p["wq"], x, sp).reshape(b, s, h, hd)
     k = sp_linear_apply(p["wk"], x, sp).reshape(b, s, kv, hd)
@@ -234,18 +268,55 @@ def gqa_apply(p: Params, x: jax.Array, cfg: ArchConfig, *,
                               chain_bf16=cfg.attn_chain_bf16)
         new_kv = {"k": k, "v": v} if return_kv else None
     elif block_table is not None and cfg.attn_impl == "fused":
-        # fused paged decode: write through the table, then let the Pallas
-        # flash-decoding kernel walk the table itself — the pool is never
-        # materialized into a dense position-indexed copy (the bandwidth
-        # win the gather path below throws away)
-        new_kv = _paged_write(cache, {"k": k[:, 0], "v": v[:, 0]},
-                              block_table, cache_pos)
-        o = paged_gqa_decode(q.reshape(b, kv, h // kv, hd),
-                             new_kv["k"], new_kv["v"], block_table,
-                             _paged_kv_len(cache_pos), scale=hd ** -0.5,
-                             window=window, cap=cfg.softcap_attn,
-                             interpret=_pallas_interpret())
-        o = o.reshape(b, 1, h, hd).astype(x.dtype)
+        if s == 1:
+            # fused paged decode: write through the table, then let the
+            # Pallas flash-decoding kernel walk the table itself — the pool
+            # is never materialized into a dense position-indexed copy (the
+            # bandwidth win the gather path below throws away)
+            new_kv = _paged_write(cache, {"k": k[:, 0], "v": v[:, 0]},
+                                  block_table, cache_pos)
+            o = paged_gqa_decode(q.reshape(b, kv, h // kv, hd),
+                                 new_kv["k"], new_kv["v"], block_table,
+                                 _paged_kv_len(cache_pos), scale=hd ** -0.5,
+                                 window=window, cap=cfg.softcap_attn,
+                                 interpret=_pallas_interpret())
+            o = o.reshape(b, 1, h, hd).astype(x.dtype)
+        else:
+            # fused paged verify span: write all S positions, then score
+            # query offset i against kv_len + i positions (causal inside the
+            # span) via one single-query kernel launch per offset
+            new_kv = _paged_write_span(cache, {"k": k, "v": v},
+                                       block_table, cache_pos)
+            o = paged_gqa_verify(q.reshape(b, s, kv, h // kv, hd),
+                                 new_kv["k"], new_kv["v"], block_table,
+                                 _paged_kv_len(cache_pos), scale=hd ** -0.5,
+                                 window=window, cap=cfg.softcap_attn,
+                                 interpret=_pallas_interpret())
+            o = o.reshape(b, s, h, hd).astype(x.dtype)
+    elif block_table is not None and s > 1:
+        # paged verify span, gather read: write the span, gather the table
+        # back to the plain layout, score every offset with its own causal
+        # window — per query the same masked-softmax chain as the s == 1
+        # gather path below (in the paged regime idx <= pos is exactly the
+        # ring formula's validity test), so verify logits at an already-
+        # committed position match the plain decode step's
+        new_kv, reads, length = _paged_update_span(
+            cache, {"k": k, "v": v}, block_table, cache_pos)
+        k_read, v_read = reads["k"], reads["v"]
+        g = h // kv
+        qg = q.reshape(b, s, kv, g, hd)
+        sc = jnp.einsum("bshgd,blhd->bshgl", qg.astype(jnp.float32),
+                        k_read.astype(jnp.float32)) * hd ** -0.5
+        sc = softcap(sc, cfg.softcap_attn)
+        idx = jnp.arange(length)[None, None, :]
+        posq = jnp.reshape(cache_pos, (-1, 1)) + jnp.arange(s)[None, :]
+        valid = idx <= posq[:, :, None]
+        if window is not None:
+            valid &= idx > (posq[:, :, None] - window)
+        sc = jnp.where(valid[:, :, None, None, :], sc, _NEG)
+        pr = jax.nn.softmax(sc, axis=-1)
+        o = jnp.einsum("bshgl,blhd->bshgd", pr, v_read.astype(jnp.float32))
+        o = o.reshape(b, s, h, hd).astype(x.dtype)
     else:
         if block_table is not None:
             # paged decode, gather read: write through the table, read the
@@ -349,7 +420,9 @@ def mla_apply(p: Params, x: jax.Array, cfg: ArchConfig, *,
     h, nd, rd, vd = cfg.n_heads, cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
     sp = cfg.sparsity
     if jnp.ndim(positions) == 1:
-        positions = positions[:, None]      # per-slot decode: [B] -> [B, 1]
+        # per-slot decode: [B] -> [B, S] consecutive positions (S == 1 for
+        # the plain decode step; S == k+1 for the speculative verify span)
+        positions = positions[:, None] + jnp.arange(s)
     qn, qpe, ckv, kpe = _mla_qkv(p, x, cfg, positions)
     scale = (nd + rd) ** -0.5
 
@@ -373,16 +446,25 @@ def mla_apply(p: Params, x: jax.Array, cfg: ArchConfig, *,
             # fused paged absorbed decode: write through the table, walk it
             # inside the kernel — scores, softmax, and the latent context
             # never leave VMEM (see paged_mla_decode)
-            new_kv = _paged_write(cache, {"ckv": ckv[:, 0], "kpe": kpe[:, 0]},
-                                  block_table, cache_pos)
+            if s == 1:
+                new_kv = _paged_write(cache,
+                                      {"ckv": ckv[:, 0], "kpe": kpe[:, 0]},
+                                      block_table, cache_pos)
+            else:
+                new_kv = _paged_write_span(cache, {"ckv": ckv, "kpe": kpe},
+                                           block_table, cache_pos)
             cc_read = cp_read = None
         elif block_table is not None:
             # paged absorbed decode, gather read: latent cache leaves are
             # block pools [n_blocks, bs, r]; same indirection as GQA
-            # (see _paged_update)
-            new_kv, reads, _ = _paged_update(
-                cache, {"ckv": ckv[:, 0], "kpe": kpe[:, 0]}, block_table,
-                cache_pos)
+            # (see _paged_update; the span variant is the verify path)
+            if s == 1:
+                new_kv, reads, _ = _paged_update(
+                    cache, {"ckv": ckv[:, 0], "kpe": kpe[:, 0]}, block_table,
+                    cache_pos)
+            else:
+                new_kv, reads, _ = _paged_update_span(
+                    cache, {"ckv": ckv, "kpe": kpe}, block_table, cache_pos)
             cc_read, cp_read = reads["ckv"], reads["kpe"]
         elif jnp.ndim(cache_pos):
             bidx = jnp.arange(b)
@@ -404,25 +486,56 @@ def mla_apply(p: Params, x: jax.Array, cfg: ArchConfig, *,
         wuv_dense = _dense_weight(p["wuv"], cfg)        # [h*vd, kv_lora]
         wuk3 = wuk_dense.reshape(h, nd, cfg.kv_lora)
         wuv3 = wuv_dense.reshape(h, vd, cfg.kv_lora)
-        qlat = jnp.einsum("bhd,hdr->bhr", qn[:, 0].astype(jnp.float32),
-                          wuk3.astype(jnp.float32))
-        if fused:
-            ov = paged_mla_decode(qlat, qpe[:, 0].astype(jnp.float32),
-                                  new_kv["ckv"], new_kv["kpe"], block_table,
-                                  _paged_kv_len(cache_pos), scale=scale,
-                                  interpret=_pallas_interpret())
+        if s == 1:
+            qlat = jnp.einsum("bhd,hdr->bhr", qn[:, 0].astype(jnp.float32),
+                              wuk3.astype(jnp.float32))
+            if fused:
+                ov = paged_mla_decode(qlat, qpe[:, 0].astype(jnp.float32),
+                                      new_kv["ckv"], new_kv["kpe"],
+                                      block_table, _paged_kv_len(cache_pos),
+                                      scale=scale,
+                                      interpret=_pallas_interpret())
+            else:
+                sc = jnp.einsum("bhr,blr->bhl", qlat,
+                                cc_read.astype(jnp.float32))
+                sc += jnp.einsum("bhd,bld->bhl", qpe[:, 0].astype(jnp.float32),
+                                 cp_read.astype(jnp.float32))
+                sc *= scale
+                idx = jnp.arange(cc_read.shape[1])[None, :]
+                posb = jnp.reshape(cache_pos, (-1, 1))  # [B, 1] or [1, 1]
+                sc = jnp.where((idx <= posb)[:, None, :], sc, _NEG)
+                pr = jax.nn.softmax(sc, axis=-1)
+                ov = jnp.einsum("bhl,blr->bhr", pr,
+                                cc_read.astype(jnp.float32))
+            o = jnp.einsum("bhr,hdr->bhd", ov, wuv3.astype(jnp.float32))
+            o = o.reshape(b, 1, h, vd).astype(x.dtype)
         else:
-            sc = jnp.einsum("bhr,blr->bhl", qlat, cc_read.astype(jnp.float32))
-            sc += jnp.einsum("bhd,bld->bhl", qpe[:, 0].astype(jnp.float32),
-                             cp_read.astype(jnp.float32))
-            sc *= scale
-            idx = jnp.arange(cc_read.shape[1])[None, :]
-            posb = jnp.reshape(cache_pos, (-1, 1))      # [B, 1] or [1, 1]
-            sc = jnp.where((idx <= posb)[:, None, :], sc, _NEG)
-            pr = jax.nn.softmax(sc, axis=-1)
-            ov = jnp.einsum("bhl,blr->bhr", pr, cc_read.astype(jnp.float32))
-        o = jnp.einsum("bhr,hdr->bhd", ov, wuv3.astype(jnp.float32))
-        o = o.reshape(b, 1, h, vd).astype(x.dtype)
+            # verify span: query offset i masks to idx <= cache_pos + i —
+            # per query the same absorbed-score chain as the s == 1 path
+            qlat = jnp.einsum("bshd,hdr->bshr", qn.astype(jnp.float32),
+                              wuk3.astype(jnp.float32))
+            if fused:
+                ov = paged_mla_verify(qlat, qpe.astype(jnp.float32),
+                                      new_kv["ckv"], new_kv["kpe"],
+                                      block_table, _paged_kv_len(cache_pos),
+                                      scale=scale,
+                                      interpret=_pallas_interpret())
+            else:
+                sc = jnp.einsum("bshr,blr->bshl", qlat,
+                                cc_read.astype(jnp.float32))
+                sc += jnp.einsum("bshd,bld->bshl", qpe.astype(jnp.float32),
+                                 cp_read.astype(jnp.float32))
+                sc *= scale
+                idx = jnp.arange(cc_read.shape[1])[None, None, :]
+                posq = (jnp.reshape(cache_pos, (-1, 1))
+                        + jnp.arange(s)[None, :])       # [B, S]
+                sc = jnp.where((idx <= posq[:, :, None])[:, :, None, :],
+                               sc, _NEG)
+                pr = jax.nn.softmax(sc, axis=-1)
+                ov = jnp.einsum("bshl,blr->bshr", pr,
+                                cc_read.astype(jnp.float32))
+            o = jnp.einsum("bshr,hdr->bshd", ov, wuv3.astype(jnp.float32))
+            o = o.astype(x.dtype)
 
     y = sp_linear_apply(p["wo"], o.reshape(b, s, h * vd), sp)
     return constrain(y, "act_batch", "act_seq", None), new_kv

@@ -15,6 +15,7 @@ Public API (family-dispatched):
 
 from __future__ import annotations
 
+import dataclasses
 import functools
 from typing import Any, Dict, Optional, Tuple
 
@@ -23,6 +24,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import layers as sparse_layers
+from repro.core.sparse_matmul import nm_rerank
 from repro.dist.api import constrain
 from repro.models import attention as attn
 from repro.models import ffn as ffn_mod
@@ -874,6 +876,103 @@ def decode_step(p, cfg: ArchConfig, caches, tokens: jax.Array, pos: jax.Array,
     x, new_caches = dec(p, cfg, caches, x, pos, block_table)
     logits = lm_head_apply(p["embed"], x, cfg.softcap_final)[:, 0]
     return logits, new_caches
+
+
+def verify_step(p, cfg: ArchConfig, caches, tokens: jax.Array, pos: jax.Array,
+                block_table: Optional[jax.Array] = None,
+                attn_impl: Optional[str] = None):
+    """Speculative verify: score a span of S tokens per row in ONE forward.
+
+    tokens [B, S] int32 occupy positions ``pos .. pos + S - 1`` (pos is the
+    int32 [B] per-slot vector); returns (logits [B, S, V], caches).  Row r's
+    logits at offset i are the model's next-token distribution after
+    ``tokens[r, :i + 1]`` — exactly what S sequential ``decode_step`` calls
+    would emit — computed against the paged pool with the span's K/V written
+    in the same call (query offset i masks to positions <= pos + i, so a
+    later draft token never leaks into an earlier score).  The family decode
+    stacks are shape-agnostic over the sequence axis; only the paged
+    attention read supports S > 1, hence the block_table requirement."""
+    if block_table is None:
+        raise ValueError("verify_step requires a block_table (the span "
+                         "write/read is paged-only; slotted serving has no "
+                         "multi-token decode path)")
+    if attn_impl is not None and attn_impl != cfg.attn_impl:
+        cfg = cfg.replace(attn_impl=attn_impl)
+    x = embed_apply(p["embed"], tokens)
+    if cfg.scale_embeds:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    dec = _FAMS[cfg.family][3]
+    x, new_caches = dec(p, cfg, caches, x, pos, block_table)
+    logits = lm_head_apply(p["embed"], x, cfg.softcap_final)
+    return logits, new_caches
+
+
+def make_draft(params, cfg: ArchConfig, kind: str = "rerank",
+               stride: int = 2):
+    """Derive a cheaper *draft view* of the same parameter pool for
+    self-speculative decoding -> ``(draft_params, draft_cfg, cache_idx)``.
+
+    ``kind="rerank"`` — the sparsity ladder: every compressed n:m linear is
+    re-ranked down to 1:m via ``sparse_matmul.nm_rerank`` (top-1-of-m-block
+    by magnitude, straight off the stored values/indices — the dense weight
+    is never materialized).  The draft reads 1/n the weight-stream bytes
+    through the same nm_spmv decode route; embeddings, norms, biases, and
+    dense-only leaves (router) are shared by reference.  ``cache_idx`` is
+    None: the draft has the target's layer count and writes every cache
+    layer.  Requires an already-converted model (``mode="compressed"``,
+    n > 1).
+
+    ``kind="skip"`` — a stride-``stride`` skip-layer stack: the stacked
+    ``params["layers"]`` keeps every ``stride``-th layer (``first_dense_
+    layers`` are always kept — they feed the MoE stack its input
+    distribution).  ``cache_idx`` is the int32 layer-index vector into the
+    target's stacked decode caches: the propose loop slices the cache stack
+    to the draft's layers and scatters the updated slices back.  Works for
+    the plain stacked families (dense, MoE); gemma-style local/global pairs
+    and hybrid stacks keep their structure elsewhere and are rejected.
+
+    Neither view copies the shared leaves — a draft costs only its own
+    modeled weight-stream share (``weight_stream_bytes(draft_params,
+    draft_cfg)``)."""
+    if kind == "rerank":
+        sp = cfg.sparsity
+        if sp.mode != "compressed" or sp.n <= 1:
+            raise ValueError(
+                f"rerank draft needs a converted compressed model with "
+                f"n > 1, got mode={sp.mode!r} n={sp.n} (run "
+                f"convert_to_compressed first)")
+
+        def walk(t):
+            if isinstance(t, dict):
+                if "w_vals" in t:
+                    v, i = nm_rerank(t["w_vals"], t["w_idx"], sp.n, sp.m, 1)
+                    out = dict(t)
+                    out["w_vals"], out["w_idx"] = v, i
+                    return out
+                return {k: walk(x) for k, x in t.items()}
+            return t
+
+        dcfg = cfg.replace(sparsity=dataclasses.replace(sp, n=1))
+        return walk(params), dcfg, None
+    if kind == "skip":
+        if ("layers" not in params or "pairs" in params
+                or cfg.local_global_period):
+            raise ValueError(
+                f"skip draft needs a plain stacked 'layers' family "
+                f"(dense/MoE); {cfg.family!r} with keys "
+                f"{sorted(params)} does not qualify")
+        if stride < 2:
+            raise ValueError(f"need stride >= 2, got {stride}")
+        nd = cfg.first_dense_layers
+        midx = list(range(0, cfg.n_layers - nd, stride))
+        sel = jnp.asarray(midx, jnp.int32)
+        dparams = dict(params)
+        dparams["layers"] = jax.tree.map(lambda a: a[sel], params["layers"])
+        dcfg = cfg.replace(n_layers=nd + len(midx))
+        cache_idx = np.asarray(list(range(nd)) + [nd + i for i in midx],
+                               np.int32)
+        return dparams, dcfg, cache_idx
+    raise ValueError(f"draft kind must be 'rerank' or 'skip', got {kind!r}")
 
 
 def prefill(p, cfg: ArchConfig, batch: Dict[str, Any],

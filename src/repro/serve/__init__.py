@@ -60,10 +60,12 @@ from repro.serve.request import (Request, RequestResult, shared_prefix_trace,
                                  synthetic_request, synthetic_trace)
 from repro.serve.scheduler import SlotScheduler
 from repro.serve.sequential import serve_fixed_batch, serve_sequential
+from repro.serve.speculative import SpecConfig
 
 __all__ = [
     "BlockPool", "PrefixIndex", "Request", "RequestResult", "ServeEngine",
-    "SlotScheduler", "SwapState", "default_buckets", "scatter_slot",
-    "seed_decode_caches", "serve_fixed_batch", "serve_sequential",
-    "shared_prefix_trace", "synthetic_request", "synthetic_trace",
+    "SlotScheduler", "SpecConfig", "SwapState", "default_buckets",
+    "scatter_slot", "seed_decode_caches", "serve_fixed_batch",
+    "serve_sequential", "shared_prefix_trace", "synthetic_request",
+    "synthetic_trace",
 ]

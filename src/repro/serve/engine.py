@@ -90,14 +90,16 @@ import numpy as np
 
 from repro.dist.api import SERVE_TP_RULES, axis_rules, make_shardings
 from repro.models import (convert_to_compressed, decode_step, init_caches,
-                          param_shard_specs, prefill,
-                          serve_ring_traffic_bytes, weight_stream_bytes)
+                          make_draft, param_shard_specs, prefill,
+                          serve_ring_traffic_bytes, verify_step,
+                          weight_stream_bytes)
 from repro.serve.cache import scatter_slot, seed_decode_caches
-from repro.serve.paged import BlockPool, SwapState, _detect_layout, \
-    default_buckets
+from repro.serve.paged import BlockPool, SwapState, TRASH_BLOCK, \
+    _detect_layout, default_buckets
 from repro.serve.prefix import PrefixIndex
 from repro.serve.request import Request, RequestResult
 from repro.serve.scheduler import SlotScheduler
+from repro.serve.speculative import SpecConfig, accept_greedy, draft_propose_k
 
 
 @dataclasses.dataclass
@@ -139,7 +141,8 @@ class ServeEngine:
                  prefill_buckets: Optional[Sequence[int]] = None,
                  attn: str = "gather", prefix_cache: bool = False,
                  preempt: str = "replay", debug_invariants: bool = False,
-                 mesh=None, tp_collective: str = "auto"):
+                 mesh=None, tp_collective: str = "auto",
+                 spec: Optional[SpecConfig] = None):
         if kv not in ("slotted", "paged"):
             raise ValueError(f"kv must be 'slotted' or 'paged', got {kv!r}")
         if tp_collective not in ("auto", "ring", "gspmd"):
@@ -162,6 +165,20 @@ class ServeEngine:
             raise ValueError("prefix_cache=True requires kv='paged' (prefix "
                              "hits share physical blocks through the block "
                              "table; the slotted layout has none)")
+        if spec is not None:
+            if kv != "paged":
+                raise ValueError("spec= requires kv='paged' (speculative "
+                                 "rollback rewinds the block table; the "
+                                 "slotted layout has none)")
+            if mesh is not None:
+                raise ValueError("spec= over a mesh is not supported yet "
+                                 "(the draft/verify jits are untested under "
+                                 "tensor-parallel layouts)")
+            if (spec.draft == "rerank" and not compressed
+                    and cfg.sparsity.mode != "compressed"):
+                raise ValueError("spec.draft='rerank' re-ranks the compressed "
+                                 "N:M pool — serve with compressed=True (or "
+                                 "params already in compressed mode)")
         if compressed:
             # serve from the compressed pool: pack every SparseLinear offline
             # (the paper's compress step) and flip the policy to 'compressed'
@@ -216,6 +233,11 @@ class ServeEngine:
         self.prefill_lengths = set()         # distinct compiled prefill seqs
         self._slots: Dict[int, _SlotState] = {}
         self._suspended: Dict[int, _Suspended] = {}   # rid -> host state
+        self._spec = spec
+        self.spec_proposed = 0               # draft tokens offered to verify
+        self.spec_accepted = 0               # draft tokens the target kept
+        self.steps_saved = 0                 # target passes avoided vs oracle
+        self.draft_steps = 0                 # draft-model decode steps run
         if kv == "paged":
             self.pool = BlockPool(cfg, n_slots, max_len, block_size, n_blocks,
                                   mesh=mesh, rules=self.rules)
@@ -233,9 +255,33 @@ class ServeEngine:
                 else default_buckets(max_len))))
             self._decode = self._sharded_jit(
                 lambda p, c, t, pos, tbl: decode_step(p, cfg, c, t, pos, tbl,
-                                                      attn_impl=attn))
+                                                      attn_impl=attn),
+                donate=(1,))
             self._prefill = self._sharded_jit(
                 lambda p, b, lp: prefill(p, cfg, b, logit_pos=lp))
+            if spec is not None:
+                if not self._all_paged:
+                    raise ValueError(
+                        "spec= requires every cache leaf behind the block "
+                        "table (slot-indexed state — SSM, conv tails, cross "
+                        "K/V — cannot be rolled back by table rewind)")
+                # the draft is a *view* of the (already converted) serving
+                # pool — shared non-linear leaves, re-ranked or strided
+                # linears — so drafting adds no weight storage
+                dp, dcfg, cache_idx = make_draft(
+                    self.params, cfg, kind=spec.draft, stride=spec.stride)
+                self._draft_params = dp
+                self._draft_cfg = dcfg
+                self.draft_stream = weight_stream_bytes(dp, dcfg)
+                self._propose = self._sharded_jit(
+                    lambda p, c, t, pos, tbl: draft_propose_k(
+                        p, dcfg, c, t, pos, tbl, k=spec.k, attn_impl=attn,
+                        cache_idx=cache_idx),
+                    donate=(1,))
+                self._verify = self._sharded_jit(
+                    lambda p, c, t, pos, tbl: verify_step(
+                        p, cfg, c, t, pos, tbl, attn_impl=attn),
+                    donate=(1,))
         else:
             self.pool = None
             self.index = None
@@ -252,14 +298,19 @@ class ServeEngine:
             # one jit each: decode re-uses a single (pool-shaped) executable;
             # prefill compiles per distinct prompt length (paged buckets).
             self._decode = self._sharded_jit(
-                lambda p, c, t, pos: decode_step(p, cfg, c, t, pos))
+                lambda p, c, t, pos: decode_step(p, cfg, c, t, pos),
+                donate=(1,))
             self._prefill = self._sharded_jit(lambda p, b: prefill(p, cfg, b))
 
-    def _sharded_jit(self, fn):
+    def _sharded_jit(self, fn, donate=()):
         """jit ``fn``; over a mesh, every call (hence the trace) runs inside
         the engine's ``axis_rules`` context so the model's ``constrain``
-        annotations — and the compressed ring's mesh lookup — resolve."""
-        jf = jax.jit(fn)
+        annotations — and the compressed ring's mesh lookup — resolve.
+        ``donate`` marks argnums whose buffers the step may reuse in place —
+        the decode/propose/verify cache pools thread linearly through the
+        tick loop, so donating them makes every step update the pool without
+        a device-side copy of the full KV state."""
+        jf = jax.jit(fn, donate_argnums=donate)
         if self.mesh is None:
             return jf
 
@@ -549,24 +600,40 @@ class ServeEngine:
         self.swap_ins += 1
         return True
 
-    def _prepare_slots(self, now: int) -> None:
+    def _prepare_slots(self, now: int, spec_set: Optional[set] = None) -> None:
         """Make every active slot writable for this tick: lazily back its
-        write position (``ensure``) and copy-on-write the backing block if
-        it is shared (``cow`` — a shared block is never mutated).  When the
-        pool runs dry, reclaim LRU prefix-index blocks first, then preempt
+        write span (``ensure``) and copy-on-write every shared block the
+        span touches (``cow`` — a shared block is never mutated).  A slot in
+        ``spec_set`` writes a k+1-wide speculative span this tick, so its
+        whole span must be backed and exclusive up front — that exclusivity
+        is what lets ``BlockPool.rollback`` free rejected-tail blocks
+        without consulting anyone else's table.  When the pool runs dry,
+        reclaim LRU prefix-index blocks first, then *demote* the slot from
+        speculation (a 1-wide span needs fewer blocks) before preempting
         the newest-admitted request (oldest requests are never preempted,
         so progress is guaranteed)."""
+        k = self._spec.k if self._spec is not None else 0
+        bs = self.pool.block_size
         for slot in sorted(self._slots,
                            key=lambda s: (self._slots[s].admitted_at, s)):
             while slot in self._slots:       # not preempted by earlier victim
                 pos = int(self.pos[slot])
-                short = max(0, pos // self.pool.block_size + 1
-                            - len(self.pool._owned[slot]))
-                need = short or (1 if self.pool.needs_cow(slot, pos) else 0)
-                ok = (self._reclaim(need) and self.pool.ensure(slot, pos)
-                      and self.pool.cow(slot, pos))
+                spec = spec_set is not None and slot in spec_set
+                last = pos + (k if spec else 0)
+                owned = self.pool._owned[slot]
+                short = max(0, last // bs + 1 - len(owned))
+                shared = [i for i in range(pos // bs,
+                                           min(last // bs, len(owned) - 1) + 1)
+                          if self.pool.ref[self.pool.table[slot, i]] > 1]
+                ok = (self._reclaim(short + len(shared))
+                      and self.pool.ensure(slot, last))
+                for i in shared:
+                    ok = ok and self.pool.cow(slot, i * bs)
                 if ok:
                     break
+                if spec:                     # cheapen before evicting anyone
+                    spec_set.discard(slot)
+                    continue
                 victim = max(self._slots,
                              key=lambda s: (self._slots[s].admitted_at, s))
                 self._preempt(victim, now)
@@ -581,6 +648,9 @@ class ServeEngine:
         before (as ``run`` once did) recorded phantom active slots on ticks
         whose slots all got preempted and counted ticks that decoded
         nothing."""
+        if self._spec is not None:
+            self._spec_step(now)
+            return
         if self.kv == "paged":
             self._prepare_slots(now)
             if not self._slots:
@@ -612,6 +682,138 @@ class ServeEngine:
             st.tokens.append(int(nxt[slot]))
             self.tok[slot] = nxt[slot]
             if len(st.tokens) >= st.req.max_new_tokens:
+                self._retire(slot, now)
+
+    # -------------------------------------------------- speculative decoding
+
+    def _masked(self, participants) -> Tuple[jnp.ndarray, ...]:
+        """(tok, pos, table) device args with every non-participant row
+        pointed at the trash block at position 0 — the same disguise idle
+        slots already wear, so a forward over the masked args touches only
+        the participants' blocks (non-participant writes land in trash,
+        their garbage logits are never read)."""
+        tbl = self.pool.table.copy()
+        pos = self.pos.copy()
+        tok = self.tok.copy()
+        for s in range(self.n_slots):
+            if s not in participants:
+                tbl[s, :] = TRASH_BLOCK
+                pos[s] = 0
+                tok[s] = 0
+        return jnp.asarray(tok), jnp.asarray(pos), jnp.asarray(tbl)
+
+    def _spec_step(self, now: int) -> None:
+        """One speculative tick: a plain decode forward for the
+        non-speculating slots, then one draft-propose + target-verify round
+        for the speculating ones — each forward runs over the full pool
+        with the other group's rows masked to trash.
+
+        A slot joins the verify span when its request opted in (``Request
+        .spec`` overriding ``SpecConfig.default_on``), its k+1 span fits
+        the table, and either it is replaying prompt tokens (``pending``,
+        from bucketed-down prefill or a prefix-cache hit) — those are
+        *forced* inputs with guaranteed acceptance, so the span consumes up
+        to k+1 of them per target pass — or it is generating with at least
+        2 tokens of budget left (a 1-token tail gains nothing from a
+        verify).  For generating slots the draft proposes k tokens and
+        greedy acceptance commits the longest draft prefix matching the
+        target's argmax plus the target's token at the first mismatch, so
+        every committed token is exactly what the non-speculative oracle
+        would have emitted.  Either way the table then rolls back to the
+        consumed position, freeing span blocks past it."""
+        k = self._spec.k
+        cap = self.pool.table_width * self.pool.block_size
+        draft_set, forced_set = set(), set()
+        for slot, st in self._slots.items():
+            on = (st.req.spec if st.req.spec is not None
+                  else self._spec.default_on)
+            if not on or int(self.pos[slot]) + k >= cap:
+                continue
+            if st.pending:
+                forced_set.add(slot)
+            elif st.req.max_new_tokens - len(st.tokens) >= 2:
+                draft_set.add(slot)
+        spec_set = draft_set | forced_set
+        self._prepare_slots(now, spec_set)
+        if not self._slots:
+            return                           # everything was preempted
+        spec_set &= set(self._slots)
+        draft_set &= spec_set
+        forced_set &= spec_set
+        plain = set(self._slots) - spec_set
+        if self.debug_invariants:
+            self.check_invariants(active_pos={
+                s: int(self.pos[s]) + (k if s in spec_set else 0)
+                for s in self._slots})
+        if plain:
+            tok, pos, tbl = self._masked(plain)
+            logits, self.pool.caches = self._decode(
+                self.params, self.pool.caches, tok, pos, tbl)
+            nxt = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
+            self.decode_steps += 1
+            self.scheduler.record_occupancy()
+            for slot in sorted(plain):
+                st = self._slots[slot]
+                self.pos[slot] += 1
+                if st.pending:               # still consuming the prompt
+                    self.tok[slot] = st.pending.pop(0)
+                    continue
+                st.tokens.append(int(nxt[slot]))
+                self.tok[slot] = nxt[slot]
+                if len(st.tokens) >= st.req.max_new_tokens:
+                    self._retire(slot, now)
+        if not spec_set:
+            return
+        span = np.zeros((self.n_slots, k + 1), np.int32)
+        span[:, 0] = self.tok
+        if draft_set:
+            tok, pos, tbl = self._masked(draft_set)
+            drafts, self.pool.caches = self._propose(
+                self._draft_params, self.pool.caches, tok, pos, tbl)
+            span[:, 1:] = np.asarray(drafts, np.int32)
+            self.draft_steps += k
+        # forced rows: the next prompt tokens ride the span in place of
+        # drafts — acceptance is structural (the oracle consumes them
+        # verbatim), so prompt catch-up advances k+1 positions per pass
+        for slot in forced_set:
+            pend = self._slots[slot].pending
+            f = min(k, len(pend))
+            span[slot, 1:] = 0
+            span[slot, 1:1 + f] = pend[:f]
+        tok, pos, tbl = self._masked(spec_set)
+        vlogits, self.pool.caches = self._verify(
+            self.params, self.pool.caches, jnp.asarray(span), pos, tbl)
+        va = np.asarray(jnp.argmax(vlogits, axis=-1), np.int32)  # [B, k+1]
+        self.decode_steps += 1
+        self.scheduler.record_occupancy()
+        acc = accept_greedy(span[:, 1:], va)
+        for slot in sorted(spec_set):
+            st = self._slots[slot]
+            if slot in forced_set:
+                f = min(k, len(st.pending))
+                del st.pending[:f]
+                self.pos[slot] += f + 1
+                if st.pending:               # prompt not done: no emission
+                    self.tok[slot] = st.pending.pop(0)
+                else:                        # first post-prompt emission
+                    st.tokens.append(int(va[slot, f]))
+                    self.tok[slot] = int(va[slot, f])
+                self.steps_saved += f
+            else:
+                budget = st.req.max_new_tokens - len(st.tokens)
+                n_commit = min(int(acc[slot]) + 1, budget)
+                commit = [int(t) for t in va[slot, :n_commit]]
+                st.tokens.extend(commit)
+                self.pos[slot] += n_commit
+                self.tok[slot] = commit[-1]
+                self.spec_proposed += k
+                self.spec_accepted += int(acc[slot])
+                self.steps_saved += n_commit - 1
+            # rewind: keep blocks backing the consumed positions, free the
+            # span tail (exclusive by _prepare_slots, so this can never
+            # take a block out from under another table)
+            self.pool.rollback(slot, int(self.pos[slot]))
+            if st.tokens and len(st.tokens) >= st.req.max_new_tokens:
                 self._retire(slot, now)
 
     # -------------------------------------------------------------- main loop
@@ -699,6 +901,22 @@ class ServeEngine:
                 "index_blocks": float(self.index.blocks if self.index else 0),
                 "index_tokens": float(self.index.cached_tokens
                                       if self.index else 0)})
+            if self._spec is not None:
+                # acceptance = share of drafted tokens the target kept;
+                # steps_saved = target passes the oracle would have needed
+                # beyond what speculation actually ran
+                out.update({
+                    "spec_proposed": float(self.spec_proposed),
+                    "spec_accepted": float(self.spec_accepted),
+                    "spec_acceptance": (self.spec_accepted
+                                        / max(self.spec_proposed, 1)),
+                    "spec_steps_saved": float(self.steps_saved),
+                    "draft_steps": float(self.draft_steps),
+                    # per-draft-step weight-stream bytes of the draft *view*
+                    # (shared storage with the target pool; this is the
+                    # modeled read share, not extra resident bytes)
+                    "draft_stream_bytes": float(
+                        self.draft_stream["stream_bytes"])})
         else:
             # sequence-axis leaves are the KV stream; slot-indexed state
             # (SSM state, conv tails, encoder cross K/V) reports separately,

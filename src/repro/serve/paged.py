@@ -350,6 +350,30 @@ class BlockPool:
         self._owned[slot] = []
         self.table[slot, :] = TRASH_BLOCK
 
+    def rollback(self, slot: int, n_positions: int) -> None:
+        """Rewind ``slot``'s table so only positions [0, n_positions) are
+        backed — the speculative-decode reject path.  Blocks past the kept
+        boundary return to the free heap; the boundary block itself stays
+        (its tail holds stale K/V, masked by position until the next write
+        overwrites it).  Every freed block must be exclusively owned: the
+        engine COWs the whole proposed span before any draft write, so a
+        shared block past ``n_positions`` means a bookkeeping bug, not a
+        legitimate state — fail loudly instead of corrupting a neighbour."""
+        keep = self.blocks_for(n_positions)
+        owned = self._owned[slot]
+        while len(owned) > keep:
+            pid = owned[-1]
+            if self.ref[pid] != 1:
+                # check before popping: a refused rollback must leave the
+                # table/owned bookkeeping untouched
+                raise ValueError(
+                    f"rollback: slot {slot} block {pid} has refcount "
+                    f"{int(self.ref[pid])} — speculative spans must be "
+                    f"exclusively owned (COW before draft writes)")
+            owned.pop()
+            self.table[slot, len(owned)] = TRASH_BLOCK
+            self.decref(pid)
+
     # --------------------------------------------------------- copy-on-write
 
     def write_block(self, slot: int, pos: int) -> int:

@@ -24,12 +24,17 @@ class Request:
         falls out of prefill (matching the fixed-batch oracle, which emits
         argmax(prefill logits) followed by max_new_tokens - 1 decode steps).
     arrival: scheduler tick at which the request becomes admissible.
+    spec: per-request speculative-decoding override when the engine runs
+        with ``spec=SpecConfig(...)`` — True forces drafting for this
+        request, False opts out (throughput traffic that prefers batched
+        target steps), None defers to ``SpecConfig.default_on``.
     """
 
     rid: int
     inputs: Dict[str, np.ndarray]
     max_new_tokens: int
     arrival: int = 0
+    spec: Optional[bool] = None
 
     @property
     def prompt_len(self) -> int:

@@ -53,7 +53,10 @@ def serve_fixed_batch(params, cfg, requests: List[Request],
     caches, _ = init_caches(cfg, batch, max_len)
     caches = seed_decode_caches(cfg, caches, pf_caches)
 
-    step = jax.jit(lambda p, c, t, pos: decode_step(p, cfg, c, t, pos))
+    # caches thread linearly through the loop, so donating them lets every
+    # step update the KV buffers in place instead of copying the full pool
+    step = jax.jit(lambda p, c, t, pos: decode_step(p, cfg, c, t, pos),
+                   donate_argnums=(1,))
     tok = jnp.argmax(last_logits, axis=-1).astype(jnp.int32)
     out = [tok]
     t0 = time.time()

@@ -1,0 +1,127 @@
+"""Self-speculative decoding on the sparsity ladder.
+
+The paper's observation is that one compressed N:M weight format can be read
+at different costs — the nm_spmv index stream makes decode matvecs cheap, and
+*how much* of the stream you read is a free parameter.  This module turns
+that into a draft/verify loop with **no separate draft model**:
+
+* the **draft** is a cheaper *view* of the already-converted pool —
+  ``models.make_draft``: a 1:m re-rank of the stored 2:m values/indices
+  (``sparse_matmul.nm_rerank``, 1/n the weight-stream bytes through the same
+  nm_spmv route) and/or a stride-s skip-layer stack (1/s the layers).  All
+  non-linear leaves (embeddings, norms, router) are shared by reference, so
+  drafting costs zero extra weight storage beyond the view's own share;
+
+* ``draft_propose_k`` rides the ordinary single-token decode path k times,
+  writing the draft's K/V into the **same paged pool** the target uses (the
+  proposed span is exclusively owned — the engine COWs it first — and every
+  draft write is overwritten by the verify pass, so the shared cache needs
+  no second copy and no draft-side rollback);
+
+* the **target** scores all k+1 positions in one batched forward
+  (``models.verify_step``), overwriting the span with canonical K/V.  Greedy
+  acceptance commits the longest prefix of draft tokens that match the
+  target's argmax **plus the target's own token at the first mismatch** —
+  every verify commits at least one target-quality token, which is what
+  makes the emitted stream *bitwise identical* to non-speculative greedy
+  decode: each committed token is the target's argmax given the committed
+  prefix, exactly what the plain engine would have emitted;
+
+* rejected tail positions roll back at the **table level**
+  (``BlockPool.rollback``): blocks past the committed prefix return to the
+  free heap (they are exclusively owned — COW ran before the span was
+  written), and the stale K/V inside the kept boundary block is masked by
+  position until the next write overwrites it.
+
+Acceptance accounting: a verify over k drafts commits a in [1, k+1] tokens
+for one target pass, so speculative decode is never *behind* the oracle in
+target passes and is strictly ahead whenever any draft token is accepted.
+The engine integrates this per slot (``ServeEngine(spec=SpecConfig(...))``):
+latency-sensitive slots draft while throughput slots batch in the same tick.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import decode_step
+
+DRAFT_KINDS = ("rerank", "skip")
+
+
+@dataclasses.dataclass(frozen=True)
+class SpecConfig:
+    """Speculative-decoding policy for ``ServeEngine(spec=...)``.
+
+    k — draft tokens proposed per verify (the verify span is k + 1 wide).
+    draft — 'rerank' (1:m re-rank of the compressed pool, needs
+        ``compressed=True``) or 'skip' (stride-``stride`` skip-layer stack,
+        plain stacked families only).
+    stride — layer stride for the 'skip' draft.
+    default_on — whether slots draft unless their request opts out
+        (``Request.spec`` overrides per request: latency-sensitive traffic
+        sets it True, throughput traffic False)."""
+
+    k: int = 3
+    draft: str = "rerank"
+    stride: int = 2
+    default_on: bool = True
+
+    def __post_init__(self):
+        if self.k < 1:
+            raise ValueError(f"need k >= 1, got {self.k}")
+        if self.draft not in DRAFT_KINDS:
+            raise ValueError(f"draft must be one of {DRAFT_KINDS}, "
+                             f"got {self.draft!r}")
+        if self.stride < 2:
+            raise ValueError(f"need stride >= 2, got {self.stride}")
+
+
+def draft_propose_k(draft_params, draft_cfg, caches, tok, pos, block_table,
+                    *, k: int, attn_impl: str,
+                    cache_idx: Optional[np.ndarray] = None):
+    """Propose k greedy draft tokens per row -> (drafts [B, k], caches).
+
+    k single-token ``decode_step`` calls through the draft view at positions
+    ``pos .. pos + k - 1``, writing draft K/V into the target's paged pool
+    (rows the engine masked to the trash table write harmlessly).  With a
+    skip-layer draft, ``cache_idx`` slices the stacked caches down to the
+    draft's layers for the loop and scatters the updated slices back — the
+    skipped layers' caches pass through untouched.  Designed to be closed
+    over and jitted once by the engine (k, attn_impl, cache_idx static)."""
+    if cache_idx is None:
+        dc = caches
+    else:
+        sel = jnp.asarray(cache_idx)
+        dc = jax.tree.map(lambda c: c[sel], caches)
+    toks = []
+    t = tok
+    for i in range(k):
+        logits, dc = decode_step(draft_params, draft_cfg, dc, t, pos + i,
+                                 block_table, attn_impl=attn_impl)
+        t = jnp.argmax(logits, axis=-1).astype(tok.dtype)
+        toks.append(t)
+    if cache_idx is not None:
+        sel = jnp.asarray(cache_idx)
+        dc = jax.tree.map(lambda full, new: full.at[sel].set(new), caches, dc)
+    return jnp.stack(toks, axis=1), dc
+
+
+def accept_greedy(drafts: np.ndarray, verify_argmax: np.ndarray) -> np.ndarray:
+    """Accepted-draft count per row under greedy acceptance.
+
+    drafts [B, k] (draft proposals), verify_argmax [B, k+1] (the target's
+    argmax at every span position) -> int [B] in [0, k]: the length of the
+    longest prefix where the draft matched the target.  The engine commits
+    ``verify_argmax[:, :a + 1]`` — the a matched tokens plus the target's
+    own token at the first mismatch (or the bonus token when everything
+    matched), so each committed token is the target's greedy choice given
+    the committed prefix."""
+    k = drafts.shape[1]
+    match = np.cumprod(drafts == verify_argmax[:, :k], axis=1)
+    return match.sum(axis=1).astype(np.int64)
