@@ -37,6 +37,16 @@ launching — jax fixes its device list at backend init), and multi-process
 via ``--distributed`` (``jax.distributed.initialize``; pass
 ``--coordinator host:port --num-processes P --process-id I`` explicitly or
 let jax pick them up from the cluster environment).
+``--compile-cache [DIR]`` wires jax's persistent compilation cache to a
+repo-local directory (default ``.cache/xla``, or ``$REPRO_COMPILE_CACHE``)
+so every executable this process builds is reused by the next one — a warm
+relaunch of the same config skips XLA compilation entirely.  ``--prewarm``
+(continuous only) AOT-compiles the engine's complete executable set —
+decode, every prefill bucket, propose/verify under ``--spec`` — at init,
+before any request is admitted, so no serving tick ever traces; the
+compile line printed after the run reports the bill (prewarmed executables,
+trace+compile seconds, mid-serve compiles — 0 when prewarm covered the
+trace — and first vs steady tick latency).
 ``serve`` is kept as the PR-1 API (fixed batch of identical requests) for
 the examples and the integration tests.
 """
@@ -191,6 +201,19 @@ def main() -> None:
                          "'ring' streams the compressed N:M shards through "
                          "collective_matmul_ag_sparse, 'gspmd' leaves layout "
                          "to the partitioner, 'auto' = ring when compressed")
+    ap.add_argument("--compile-cache", nargs="?", const="auto", default=None,
+                    metavar="DIR",
+                    help="persist compiled executables across process "
+                         "restarts via jax's compilation cache.  Optional "
+                         "DIR; bare flag resolves $REPRO_COMPILE_CACHE and "
+                         "then .cache/xla (the directory CI persists with "
+                         "actions/cache)")
+    ap.add_argument("--prewarm", action="store_true",
+                    help="AOT-compile the engine's complete executable set "
+                         "(decode, every prefill bucket, propose/verify "
+                         "under --spec) at init, before any admission — "
+                         "steady-state ticks never trace (continuous "
+                         "scheduler only)")
     ap.add_argument("--distributed", action="store_true",
                     help="call jax.distributed.initialize() before touching "
                          "devices (multi-process serving; the mesh then "
@@ -221,6 +244,15 @@ def main() -> None:
         if args.draft == "rerank" and args.weights != "compressed":
             raise SystemExit("--draft rerank re-ranks the compressed pool: "
                              "use --weights compressed (or --draft skip)")
+    if args.prewarm and args.scheduler != "continuous":
+        raise SystemExit("--prewarm requires --scheduler continuous (the "
+                         "sequential oracle has no enumerable shape set)")
+    if args.compile_cache is not None:
+        # before any jit runs (init_model, conversion) so even the one-shot
+        # init executables land in the persistent cache
+        from repro.serve import enable_compile_cache
+        cache_dir = enable_compile_cache(args.compile_cache)
+        print(f"compile cache: {cache_dir}")
     if args.distributed:
         # must run before any jax.devices()/computation: the coordinator
         # handshake fixes the global device list
@@ -259,9 +291,18 @@ def main() -> None:
                           preempt=args.preempt, mesh=mesh,
                           tp_collective=args.tp_collective,
                           spec=(SpecConfig(k=args.spec_k, draft=args.draft)
-                                if args.spec else None))
+                                if args.spec else None),
+                          prewarm=args.prewarm)
         results = eng.run(reqs)
         st = eng.stats()
+        mode = "prewarmed" if args.prewarm else "lazy"
+        print(f"compile[{mode}]: {int(st['prewarmed_executables'])} "
+              f"prewarmed + {int(st['mid_serve_compiles'])} mid-serve of "
+              f"{int(st['executables_expected'])} expected executables, "
+              f"{st['compile_seconds']:.2f}s compile bill "
+              f"(bring-up {st['init_seconds']:.2f}s), first tick "
+              f"{st['first_tick_s'] * 1e3:.1f}ms vs steady "
+              f"{st['steady_tick_s'] * 1e3:.1f}ms")
         print(f"continuous[{args.weights},{args.kv},{args.attn}]: "
               f"{int(st['tokens'])} tokens in "
               f"{int(st['decode_steps'])} decode steps, "

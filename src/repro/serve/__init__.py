@@ -38,6 +38,14 @@ one preallocated KV-cache tree) fed by a FCFS request queue:
   lockstep until its slowest member finishes.  Continuous batching must be
   token-for-token equivalent to it under matched batch composition; the
   throughput win is purely from refilling early-finished slots.
+* ``prewarm``   — compile management: ``enable_compile_cache`` wires jax's
+  persistent compilation cache to a repo-local directory (executables
+  survive process restarts), and ``JitEntry``/``CompileLog`` give every
+  engine jit entry point AOT prewarming (``ServeEngine(prewarm=True)``
+  compiles the complete ``executable_shapes()`` set before admission, so
+  steady-state ticks never trace) plus per-executable compile accounting
+  (``stats()["mid_serve_compiles"]`` et al., hard-asserted zero under
+  ``strict_prewarm=True``).
 
 Relation to the paper
 ---------------------
@@ -56,6 +64,8 @@ from repro.serve.cache import scatter_slot, seed_decode_caches
 from repro.serve.engine import ServeEngine
 from repro.serve.paged import BlockPool, SwapState, default_buckets
 from repro.serve.prefix import PrefixIndex
+from repro.serve.prewarm import (CompileEvent, CompileLog, JitEntry,
+                                 abstract_batch, enable_compile_cache)
 from repro.serve.request import (Request, RequestResult, shared_prefix_trace,
                                  synthetic_request, synthetic_trace)
 from repro.serve.scheduler import SlotScheduler
@@ -63,8 +73,9 @@ from repro.serve.sequential import serve_fixed_batch, serve_sequential
 from repro.serve.speculative import SpecConfig
 
 __all__ = [
-    "BlockPool", "PrefixIndex", "Request", "RequestResult", "ServeEngine",
-    "SlotScheduler", "SpecConfig", "SwapState", "default_buckets",
+    "BlockPool", "CompileEvent", "CompileLog", "JitEntry", "PrefixIndex",
+    "Request", "RequestResult", "ServeEngine", "SlotScheduler", "SpecConfig",
+    "SwapState", "abstract_batch", "default_buckets", "enable_compile_cache",
     "scatter_slot", "seed_decode_caches", "serve_fixed_batch",
     "serve_sequential", "shared_prefix_trace", "synthetic_request",
     "synthetic_trace",

@@ -72,6 +72,23 @@ additionally route through the explicit sparse ring
 *compressed* weight shard — the paper's Fig 12 traffic property at cluster
 scale; ``stats()`` reports the modeled ring bytes vs the dense-TP baseline.
 
+``prewarm=True`` (PR 10) moves *compilation* out of the serving loop the
+same way the paper moves index resolution out of the matmul inner loop:
+``executable_shapes()`` derives the complete set of executables this
+engine configuration can ever need (one decode / propose / verify shape
+over the full pool width, one prefill shape per bucket — the bucket set
+always contains ``max_len``, so it is closed over every admissible
+prompt), and ``prewarm()`` AOT-compiles all of them at init, before any
+request is admitted, registering the compiled executables for direct
+dispatch (``serve.prewarm.JitEntry``) — steady-state ticks never trace.
+``compile_cache=`` additionally persists every executable across process
+restarts through jax's compilation cache (``enable_compile_cache``), so a
+warm bring-up pays lowering but not XLA compilation.  Every compile the
+engine does pay is accounted in ``stats()`` (per-entry counters,
+``mid_serve_compiles``, ``compile_seconds``, first-vs-steady tick wall
+time); ``strict_prewarm=True`` turns any mid-serve compile into a hard
+error — the test-mode proof that the enumerated set was complete.
+
 This is the decode regime the paper's compressed N:M format targets: every
 step is a small-batch matvec against the compressed weight stream
 (``kernels.nm_spmv``'s vindexmac dataflow), so keeping slots full converts
@@ -82,13 +99,14 @@ full by admitting on bytes, not rows.
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.dist.api import SERVE_TP_RULES, axis_rules, make_shardings
+from repro.dist.api import SERVE_TP_RULES, make_shardings
 from repro.models import (convert_to_compressed, decode_step, init_caches,
                           make_draft, param_shard_specs, prefill,
                           serve_ring_traffic_bytes, verify_step,
@@ -97,6 +115,8 @@ from repro.serve.cache import scatter_slot, seed_decode_caches
 from repro.serve.paged import BlockPool, SwapState, TRASH_BLOCK, \
     _detect_layout, default_buckets
 from repro.serve.prefix import PrefixIndex
+from repro.serve.prewarm import (CompileLog, JitEntry, abstract_batch,
+                                 enable_compile_cache)
 from repro.serve.request import Request, RequestResult
 from repro.serve.scheduler import SlotScheduler
 from repro.serve.speculative import SpecConfig, accept_greedy, draft_propose_k
@@ -133,7 +153,14 @@ class ServeEngine:
     only) reads the pool through the in-kernel block-table walk of
     ``kernels.flash_attention``; ``attn="gather"`` is the dense-gather
     oracle read.  ``debug_invariants=True`` cross-checks the block tables
-    against the pool free list before every decode tick."""
+    against the pool free list before every decode tick.
+
+    ``compile_cache=`` (a directory, or True for the default — see
+    ``serve.prewarm.enable_compile_cache``) persists compiled executables
+    across processes; ``prewarm=True`` AOT-compiles the engine's complete
+    executable set (``executable_shapes()``) before any request is
+    admitted; ``strict_prewarm=True`` hard-errors on any compile inside
+    the serving loop (the ``mid_serve_compiles == 0`` assertion mode)."""
 
     def __init__(self, params, cfg, n_slots: int, max_len: int,
                  compressed: bool = False, kv: str = "slotted",
@@ -142,7 +169,16 @@ class ServeEngine:
                  attn: str = "gather", prefix_cache: bool = False,
                  preempt: str = "replay", debug_invariants: bool = False,
                  mesh=None, tp_collective: str = "auto",
-                 spec: Optional[SpecConfig] = None):
+                 spec: Optional[SpecConfig] = None,
+                 compile_cache=None, prewarm: bool = False,
+                 strict_prewarm: bool = False):
+        t_init = time.perf_counter()
+        # cache config is process-global; set it before anything compiles so
+        # the conversion/device_put jits below persist too
+        self.compile_cache_dir = (enable_compile_cache(compile_cache)
+                                  if compile_cache else None)
+        self._compile_log = CompileLog(strict=strict_prewarm)
+        self._jits: Dict[str, JitEntry] = {}
         if kv not in ("slotted", "paged"):
             raise ValueError(f"kv must be 'slotted' or 'paged', got {kv!r}")
         if tp_collective not in ("auto", "ring", "gspmd"):
@@ -250,15 +286,20 @@ class ServeEngine:
                                all(ax is not None
                                    for ax in self.pool._seq_axes))
             self.index = PrefixIndex() if prefix_cache else None
-            self.prefill_buckets = tuple(sorted(set(
+            # max_len always rides in the bucket set so every admissible
+            # prompt lands in a bucket (submit caps prompts at max_len):
+            # the executable set is *closed* — what prewarm enumerates is
+            # exactly what admission can ever compile
+            self._prefill_buckets = tuple(sorted(set(
                 prefill_buckets if prefill_buckets is not None
-                else default_buckets(max_len))))
-            self._decode = self._sharded_jit(
+                else default_buckets(max_len)) | {max_len}))
+            self._decode = self._jit_entry(
+                "decode",
                 lambda p, c, t, pos, tbl: decode_step(p, cfg, c, t, pos, tbl,
                                                       attn_impl=attn),
                 donate=(1,))
-            self._prefill = self._sharded_jit(
-                lambda p, b, lp: prefill(p, cfg, b, logit_pos=lp))
+            self._prefill = self._jit_entry(
+                "prefill", lambda p, b, lp: prefill(p, cfg, b, logit_pos=lp))
             if spec is not None:
                 if not self._all_paged:
                     raise ValueError(
@@ -273,12 +314,14 @@ class ServeEngine:
                 self._draft_params = dp
                 self._draft_cfg = dcfg
                 self.draft_stream = weight_stream_bytes(dp, dcfg)
-                self._propose = self._sharded_jit(
+                self._propose = self._jit_entry(
+                    "propose",
                     lambda p, c, t, pos, tbl: draft_propose_k(
                         p, dcfg, c, t, pos, tbl, k=spec.k, attn_impl=attn,
                         cache_idx=cache_idx),
                     donate=(1,))
-                self._verify = self._sharded_jit(
+                self._verify = self._jit_entry(
+                    "verify",
                     lambda p, c, t, pos, tbl: verify_step(
                         p, cfg, c, t, pos, tbl, attn_impl=attn),
                     donate=(1,))
@@ -286,7 +329,7 @@ class ServeEngine:
             self.pool = None
             self.index = None
             self._all_paged = False
-            self.prefill_buckets = ()
+            self._prefill_buckets = ()
             self.caches, cache_specs = init_caches(cfg, n_slots, max_len)
             if mesh is not None:
                 self.caches = jax.device_put(self.caches, make_shardings(
@@ -297,27 +340,117 @@ class ServeEngine:
             _, _, self._slotted_seq_axes, _ = _detect_layout(cfg, n_slots)
             # one jit each: decode re-uses a single (pool-shaped) executable;
             # prefill compiles per distinct prompt length (paged buckets).
-            self._decode = self._sharded_jit(
-                lambda p, c, t, pos: decode_step(p, cfg, c, t, pos),
+            self._decode = self._jit_entry(
+                "decode", lambda p, c, t, pos: decode_step(p, cfg, c, t, pos),
                 donate=(1,))
-            self._prefill = self._sharded_jit(lambda p, b: prefill(p, cfg, b))
+            self._prefill = self._jit_entry(
+                "prefill", lambda p, b: prefill(p, cfg, b))
+        self._exec_shapes = None
+        self._tick_wall: List[float] = []
+        self.prewarmed = False
+        self.prewarm_seconds = 0.0
+        if prewarm:
+            self.prewarm()
+        self.init_seconds = time.perf_counter() - t_init
+        # anything compiled from here on is a *mid-serve* compile — the
+        # cold-start bill prewarm exists to remove (strict mode raises)
+        self._compile_log.serving = True
 
-    def _sharded_jit(self, fn, donate=()):
-        """jit ``fn``; over a mesh, every call (hence the trace) runs inside
-        the engine's ``axis_rules`` context so the model's ``constrain``
-        annotations — and the compressed ring's mesh lookup — resolve.
-        ``donate`` marks argnums whose buffers the step may reuse in place —
-        the decode/propose/verify cache pools thread linearly through the
-        tick loop, so donating them makes every step update the pool without
-        a device-side copy of the full KV state."""
-        jf = jax.jit(fn, donate_argnums=donate)
-        if self.mesh is None:
-            return jf
+    def _jit_entry(self, name: str, fn, donate=()) -> JitEntry:
+        """One accounted jit entry point (see ``serve.prewarm.JitEntry``):
+        over a mesh, every trace runs inside the engine's ``axis_rules``
+        context so the model's ``constrain`` annotations — and the
+        compressed ring's mesh lookup — resolve.  ``donate`` marks argnums
+        whose buffers the step may reuse in place — the decode/propose/
+        verify cache pools thread linearly through the tick loop, so
+        donating them makes every step update the pool without a
+        device-side copy of the full KV state.  All entries share the
+        engine's ``CompileLog``, so ``stats()`` sees the whole compile
+        bill."""
+        entry = JitEntry(name, fn, donate=donate, mesh=self.mesh,
+                         rules=self.rules, log=self._compile_log)
+        self._jits[name] = entry
+        return entry
 
-        def call(*args):
-            with axis_rules(self.mesh, self.rules):
-                return jf(*args)
-        return call
+    @property
+    def prefill_buckets(self) -> Tuple[int, ...]:
+        return self.executable_shapes()["prefill_buckets"]
+
+    def executable_shapes(self) -> Dict[str, object]:
+        """The complete compiled-shape universe of this engine config — the
+        single source of truth consulted by admission (``_plan`` buckets via
+        the ``prefill_buckets`` property), by ``prewarm()`` (what to
+        AOT-compile) and by ``stats()`` (``executables_expected``), so what
+        we prewarm, what we admit against and what we report cannot drift.
+
+        paged: one pool-shaped executable each for decode (and propose /
+        verify under ``spec=``) plus one prefill shape per bucket — the
+        bucket set contains ``max_len``, so every admissible prompt lands
+        in a bucket (token prompts bucket down, embeds prompts and
+        sub-bucket token prompts bucket up) and the set is closed.
+        slotted: decode is one executable; prefill compiles per distinct
+        prompt length, which no config-only enumeration can bound —
+        ``prewarm(prompt_lens=...)`` takes the trace's lengths explicitly."""
+        if self._exec_shapes is None:
+            entries: Dict[str, int] = {"decode": 1}
+            if self.kv == "paged":
+                entries["prefill"] = len(self._prefill_buckets)
+                if self._spec is not None:
+                    entries["propose"] = 1
+                    entries["verify"] = 1
+            self._exec_shapes = {
+                "prefill_buckets": self._prefill_buckets,
+                "entries": entries,
+                "total": sum(entries.values()),
+            }
+        return self._exec_shapes
+
+    def prewarm(self, prompt_lens: Sequence[int] = ()) -> None:
+        """AOT-compile the engine's complete executable set before any
+        request is admitted (``jit(...).lower(abstract).compile()`` per
+        shape; see ``serve.prewarm.JitEntry.aot_compile``).  The params and
+        cache pools are lowered *concrete* — their committed shardings (the
+        TP mesh layout) are baked into the executables — while the per-call
+        host arguments (tokens, positions, tables, prompt batches) lower as
+        ``ShapeDtypeStruct``s.  Idempotent: shapes already registered are
+        skipped.  ``prompt_lens`` adds explicit prefill lengths — the only
+        way to prewarm slotted prefill, whose shape set is per-prompt."""
+        t0 = time.perf_counter()
+        shapes = self.executable_shapes()
+        sds = jax.ShapeDtypeStruct
+        tok = sds((self.n_slots,), jnp.int32)
+        pos = sds((self.n_slots,), jnp.int32)
+        if self.kv == "paged":
+            caches = self.pool.caches
+            tbl = sds((self.n_slots, self.pool.table_width), jnp.int32)
+            self._decode.aot_compile(self.params, caches, tok, pos, tbl,
+                                     label="decode")
+            if self._spec is not None:
+                k = self._spec.k
+                self._propose.aot_compile(self._draft_params, caches, tok,
+                                          pos, tbl, label=f"propose@k{k}")
+                span = sds((self.n_slots, k + 1), jnp.int32)
+                self._verify.aot_compile(self.params, caches, span, pos, tbl,
+                                         label=f"verify@k{k}")
+            lens = set(shapes["prefill_buckets"]) | set(prompt_lens)
+            for b in sorted(lens):
+                self._prefill.aot_compile(
+                    self.params, abstract_batch(self.cfg, b),
+                    sds((), jnp.int32), label=f"prefill@{b}")
+        else:
+            self._decode.aot_compile(self.params, self.caches, tok, pos,
+                                     label="decode")
+            for b in sorted(set(prompt_lens)):
+                self._prefill.aot_compile(
+                    self.params, abstract_batch(self.cfg, b),
+                    label=f"prefill@{b}")
+        self.prewarm_seconds += time.perf_counter() - t0
+        self.prewarmed = True
+
+    def compile_events(self) -> List[Dict[str, object]]:
+        """Per-executable compile records (entry, label, phase, trace/total
+        seconds) — the observability feed for the CLI and BENCH_9."""
+        return [dataclasses.asdict(e) for e in self._compile_log.events]
 
     # --------------------------------------------------------------- frontend
 
@@ -839,7 +972,12 @@ class ServeEngine:
                 for slot, req in self.scheduler.admit(t):
                     self._admit(slot, req, t)
             if self.active.any():
+                t0 = time.perf_counter()
                 self.step(t)                 # samples occupancy iff it decodes
+                # step() reads the logits to host, so the wall time below is
+                # synchronous — the cold/warm tick observability behind
+                # stats()["first_tick_s"] / ["steady_tick_s"]
+                self._tick_wall.append(time.perf_counter() - t0)
             t += 1
         self.ticks = t
         return self.results
@@ -856,11 +994,30 @@ class ServeEngine:
     def stats(self) -> Dict[str, float]:
         toks = sum(len(r.tokens) for r in self.results.values())
         ws = self.weight_stream
+        log = self._compile_log
         out = {"decode_steps": float(self.decode_steps),
                "occupancy": self.scheduler.occupancy(),
                "tokens": float(toks),
                "ticks": float(self.ticks),
-               "prefill_compiles": float(len(self.prefill_lengths)),
+               # the full compile bill, per entry point: executables
+               # actually built (prewarmed + lazy), not just the prefill
+               # lengths admission asked for — decode/propose/verify were
+               # previously invisible here
+               "prefill_compiles": float(self._prefill.n_compiles),
+               "decode_compiles": float(self._decode.n_compiles),
+               "prewarmed_executables": float(log.prewarm_compiles),
+               "mid_serve_compiles": float(log.mid_serve_compiles),
+               "compile_seconds": float(log.compile_seconds),
+               "prewarm_seconds": float(self.prewarm_seconds),
+               "init_seconds": float(self.init_seconds),
+               "warm_calls": float(sum(j.warm_calls
+                                       for j in self._jits.values())),
+               "executables_expected": float(
+                   self.executable_shapes()["total"]),
+               "first_tick_s": float(self._tick_wall[0]
+                                     if self._tick_wall else 0.0),
+               "steady_tick_s": float(np.median(self._tick_wall[1:])
+                                      if len(self._tick_wall) > 1 else 0.0),
                "prefill_calls": float(self.prefill_calls),
                "rejected": float(self.rejected),
                # per-decode-step weight-stream traffic (every step re-reads
@@ -906,6 +1063,8 @@ class ServeEngine:
                 # steps_saved = target passes the oracle would have needed
                 # beyond what speculation actually ran
                 out.update({
+                    "propose_compiles": float(self._propose.n_compiles),
+                    "verify_compiles": float(self._verify.n_compiles),
                     "spec_proposed": float(self.spec_proposed),
                     "spec_accepted": float(self.spec_accepted),
                     "spec_acceptance": (self.spec_accepted
